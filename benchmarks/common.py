@@ -1,0 +1,32 @@
+"""Shared benchmark helpers: timing + CSV row convention.
+
+Every benchmark module exposes ``rows() -> list[(name, us_per_call, derived)]``;
+``benchmarks.run`` prints them as ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time per call in µs (CPU wall time — the TPU-relevant
+    numbers are the model/dry-run 'derived' column)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def emit(rows):
+    for name, us, derived in rows:
+        us_s = f"{us:.1f}" if isinstance(us, (int, float)) else str(us)
+        print(f"{name},{us_s},{derived}")

@@ -1,0 +1,84 @@
+"""Paper Fig. 7: EBISU speedup over baselines.
+
+The CUDA SOTA baselines cannot run in this container, and a throughput model
+cannot capture their implementation-level losses (register spills, occupancy
+ceilings) — so this benchmark reproduces Fig. 7's *structure* with baselines
+implemented in THIS framework, all evaluated with the same §5 model:
+
+  naive     — no temporal blocking (t=1): one HBM round-trip per step;
+  shallow   — DRSTENCIL/STENCILGEN-regime: overlapped SM tiling at their
+              published Table-3 depths, no register streaming;
+  ebisu     — the §6 planner's streaming schedule (deep t + RST + CMQ).
+
+Validation anchors against the paper's own measured EBISU numbers (A100):
+  j2d5pt: 440 GCells/s @ t=7, 482 @ t=12 (§6.2.1); j3d7pt: 197 w/ device
+  tiling (§6.3.2); our A100-model prediction for the same configs is printed
+  alongside (model-vs-measured, the §7.4.7 '80-88% of PP' effect included).
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core import roofline as rl
+from repro.core.planner import plan
+from repro.core.stencil_spec import TABLE2, TABLE3_DEPTHS
+
+
+def _naive(spec, hw):
+    return rl.attainable(spec, 1, hw, rst=False).pp_cells_per_s
+
+
+def _shallow(spec, hw, t):
+    if not t:
+        return 0.0
+    tile = (256, 256) if spec.ndim == 2 else (32, 32)
+    v = max(0.05, rl.v_smtile(spec, t, tile))
+    return rl.attainable(spec, t, hw, rst=False, v=v).pp_cells_per_s
+
+
+def rows():
+    out = []
+    sp_naive, sp_shallow = [], []
+    sp_naive_a, sp_shallow_a = [], []
+    for name, spec in TABLE2.items():
+        d = TABLE3_DEPTHS[name]
+        t_shallow = max(v for k, v in d.items() if k != "ebisu" and v)
+        for hw, tag in ((rl.A100_FP64, "a100"), (rl.TPU_V5E, "v5e")):
+            ebisu = plan(spec, hw).pp.pp_cells_per_s
+            nv = _naive(spec, hw)
+            sh = _shallow(spec, hw, t_shallow)
+            if tag == "v5e":
+                sp_naive.append(ebisu / nv)
+                sp_shallow.append(ebisu / sh)
+            else:
+                sp_naive_a.append(ebisu / nv)
+                sp_shallow_a.append(ebisu / sh)
+            out.append((f"fig7/{name}/{tag}", 0.0,
+                        f"ebisu={ebisu/1e9:.0f}G|naive={nv/1e9:.0f}G|"
+                        f"shallow(t={t_shallow})={sh/1e9:.0f}G|"
+                        f"speedup_vs_naive={ebisu/nv:.2f}x|"
+                        f"vs_shallow={ebisu/sh:.2f}x"))
+    geo = lambda xs: math.exp(sum(map(math.log, xs)) / len(xs))  # noqa: E731
+    out.append(("fig7/geomean-a100", 0.0,
+                f"vs_naive={geo(sp_naive_a):.2f}x|"
+                f"vs_shallow={geo(sp_shallow_a):.2f}x|"
+                f"paper_vs_best_sota=1.49x(measured) <- the reproduction "
+                f"anchor"))
+    out.append(("fig7/geomean-v5e", 0.0,
+                f"vs_naive={geo(sp_naive):.2f}x|"
+                f"vs_shallow={geo(sp_shallow):.2f}x|"
+                f"note=VPU-bound earlier than A100 (DESIGN.md §2)"))
+    # model-vs-paper-measured anchors
+    s2 = TABLE2["j2d5pt"]
+    for t, meas in ((7, 440), (12, 482)):
+        pred = rl.attainable(s2, t, rl.A100_FP64, rst=True,
+                             v=0.95).pp_cells_per_s / 1e9
+        out.append((f"fig7/anchor-j2d5pt-t{t}", 0.0,
+                    f"model={pred:.0f}G|paper_measured={meas}G|"
+                    f"ratio={meas/pred:.2f}"))
+    s3 = TABLE2["j3d7pt"]
+    pred = plan(s3, rl.A100_FP64).pp.pp_cells_per_s / 1e9
+    out.append(("fig7/anchor-j3d7pt", 0.0,
+                f"model={pred:.0f}G|paper_measured=197G(w/Dtile)|"
+                f"note=per-SM-budget-model(paper shares 17MB device-wide)"))
+    return out

@@ -1,0 +1,24 @@
+"""Paper Fig. 8: occupancy + on-chip resource use per benchmark.
+
+TPU analogue: the VMEM footprint each EBISU plan claims (scratch rings +
+strip buffers) as a fraction of the 128 MiB budget, plus the parallelism
+setting (num_buffers × ILP — the Little's-law minimum, §6.1).
+derived: ``vmem=<MiB>(<pct>)|buffers=<n>|ilp=<n>``.
+"""
+from __future__ import annotations
+
+from repro.core import roofline as rl
+from repro.core.planner import plan
+from repro.core.stencil_spec import TABLE2
+
+
+def rows():
+    out = []
+    for name, spec in TABLE2.items():
+        p = plan(spec, rl.TPU_V5E)
+        frac = p.vmem_bytes / rl.TPU_V5E.onchip_bytes
+        out.append((f"fig8/{name}", 0.0,
+                    f"vmem={p.vmem_bytes/2**20:.1f}MiB({frac:.0%})|"
+                    f"buffers={p.parallelism.num_buffers}|"
+                    f"ilp={p.parallelism.ilp}|tile={p.block}"))
+    return out

@@ -1,0 +1,77 @@
+"""Paper Fig. 9: incremental optimization breakdown (BASE → +CMQ → +PRE →
++LST → +RST) on the 2d5pt / 3d7pt case studies, via the §5 model on v5e.
+
+Mapping of each scheme to a model parameter (DESIGN.md §2):
+  BASE: t=1, no queue, synchronous I/O (V_Dtile with n=t syncs);
+  CMQ : deep t (planner) — moves OI right, shifting the gm bottleneck;
+  PRE : pipelined DMA (num_buffers>=2) — removes the latency penalty
+        (modeled as the Little's-law stall fraction);
+  LST : one sync per tile instead of per plane-step (V_Dtile n: t -> 1);
+  RST : a_sm w/ RST — cuts scratchpad traffic, raising the sm-bound.
+derived: modeled GCells/s after each increment (paper's Fig. 9 shape:
+monotone except LST-on-3D, which the paper also observed regressing).
+"""
+from __future__ import annotations
+
+from repro.core import roofline as rl
+from repro.core.planner import minimal_parallelism, plan
+from repro.core.stencil_spec import get
+
+HW = rl.TPU_V5E
+
+
+def _stall_fraction(spec, hw, plane_cells):
+    """Latency stall when not prefetching: one HBM latency per plane DMA."""
+    par = minimal_parallelism(hw, plane_cells * hw.s_cell)
+    t_plane = plane_cells * hw.s_cell / hw.b_gm
+    return t_plane / (t_plane + hw.mem_latency)
+
+
+def stages(name: str):
+    spec = get(name)
+    p = plan(spec, HW)
+    tile_cells = (p.block[0] * p.block[1] if spec.ndim == 2
+                  else p.block[0] * p.block[1] * p.block[2])
+    plane = p.block[-1] * (p.block[-2] if spec.ndim == 3 else 1)
+
+    def tile_time(t, rst):
+        tg, ts, tc, _ = rl.component_times(spec, t, HW, rst=rst,
+                                           d_all=tile_cells)
+        return max(tg, ts, tc)
+
+    out = []
+    # BASE: t=1, per-plane sync, no prefetch
+    v = rl.v_dtile(tile_time(1, False), HW, n_syncs=max(1, tile_cells // plane))
+    base = rl.attainable(spec, 1, HW, rst=False, v=v * _stall_fraction(
+        spec, HW, plane)).pp_cells_per_s
+    out.append(("BASE", base))
+    # +CMQ: deep temporal blocking via the circular multi-queue
+    v = rl.v_dtile(tile_time(p.t, False), HW,
+                   n_syncs=max(1, tile_cells // plane))
+    cmq = rl.attainable(spec, p.t, HW, rst=False, v=v * _stall_fraction(
+        spec, HW, plane)).pp_cells_per_s
+    out.append(("+CMQ", cmq))
+    # +PRE: pipelined DMA hides the latency stall
+    pre = rl.attainable(spec, p.t, HW, rst=False, v=v).pp_cells_per_s
+    out.append(("+PRE", pre))
+    # +LST: one sync per tile
+    v1 = rl.v_dtile(tile_time(p.t, False), HW, n_syncs=1)
+    lst = rl.attainable(spec, p.t, HW, rst=False, v=v1).pp_cells_per_s
+    out.append(("+LST", lst))
+    # +RST: register streaming cuts a_sm
+    rst = rl.attainable(spec, p.t, HW, rst=True, v=v1).pp_cells_per_s
+    out.append(("+RST", rst))
+    return out, spec
+
+
+def rows():
+    out = []
+    for name in ("j2d5pt", "j3d7pt"):
+        st, spec = stages(name)
+        chain = "->".join(f"{k}:{v/1e9:.0f}G" for k, v in st)
+        bound = rl.attainable(spec, plan(spec, HW).t, HW, rst=True,
+                              v=1.0).p_cells_per_s
+        out.append((f"fig9/{name}", 0.0,
+                    f"{chain}|attainable={bound/1e9:.0f}G|"
+                    f"final_frac={st[-1][1]/bound:.0%}"))
+    return out

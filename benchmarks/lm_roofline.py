@@ -1,0 +1,55 @@
+"""The 40-cell LM roofline table (framework deliverable g).
+
+Reads the dry-run JSONs from results/dryrun (produced by
+``python -m repro.launch.dryrun``) and emits one row per (arch × shape)
+single-pod cell: the three roofline terms, dominant bottleneck, the
+MODEL_FLOPS/HLO_FLOPs "useful compute" ratio, and the roofline fraction.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.environ.get("REPRO_DRYRUN_RESULTS", "results/dryrun")
+
+
+def load(mesh="single"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def rows():
+    out = []
+    recs = load("single")
+    if not recs:
+        return [("lm_roofline/missing", 0.0,
+                 f"no dry-run results under {RESULTS} — run "
+                 "`python -m repro.launch.dryrun` first")]
+    for r in recs:
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        if r["status"] == "skipped":
+            out.append((name, 0.0, f"skipped:{r['reason']}"))
+            continue
+        if r["status"] != "ok":
+            out.append((name, 0.0, f"ERROR:{r.get('error','?')[:80]}"))
+            continue
+        t = r["terms"]
+        step = max(t.values())
+        out.append((name, step * 1e6,
+                    f"cmp={t['compute_s']:.3f}s|mem={t['memory_s']:.3f}s|"
+                    f"coll={t['collective_s']:.3f}s|dom={r['dominant']}|"
+                    f"useful={r['useful_flops_ratio'] and round(r['useful_flops_ratio'],2)}|"
+                    f"roofline={r['roofline_fraction'] and round(r['roofline_fraction'],4)}|"
+                    f"hbm_ok={r['hbm_ok']}"))
+    # multi-pod pass/fail summary
+    multi = load("multi")
+    ok = sum(1 for r in multi if r["status"] == "ok")
+    skip = sum(1 for r in multi if r["status"] == "skipped")
+    err = sum(1 for r in multi if r["status"] not in ("ok", "skipped"))
+    out.append(("roofline/multi-pod-summary", 0.0,
+                f"ok={ok}|skipped={skip}|errors={err} (512-chip mesh)"))
+    return out

@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure + the LM roofline.
+
+Prints ``name,us_per_call,derived`` CSV.  Run:
+    PYTHONPATH=src python -m benchmarks.run [--only <prefix>]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run only modules whose name contains this")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_kernels, fig7_speedups, fig8_resources,
+                            fig9_breakdown, lm_roofline, table2_suite,
+                            table3_depths)
+    from benchmarks.common import emit
+
+    modules = [
+        ("table2", table2_suite),
+        ("table3", table3_depths),
+        ("fig7", fig7_speedups),
+        ("fig8", fig8_resources),
+        ("fig9", fig9_breakdown),
+        ("kernels", bench_kernels),
+        ("lm_roofline", lm_roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        if args.only and args.only not in name:
+            continue
+        try:
+            emit(mod.rows())
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Paper Table 2: the stencil suite — kernel timing + modeled TPU GCells/s.
+
+us_per_call: wall time of the EBISU kernel (interpret mode, reduced domain).
+derived: ``<plan-t>|<modeled GCells/s on v5e>|<bottleneck>|a_sm=<rst>/<worst>``.
+"""
+from __future__ import annotations
+
+from benchmarks.common import time_fn
+from repro.core import roofline as rl
+from repro.core.planner import plan
+from repro.core.stencil_spec import TABLE2
+from repro.kernels import ops
+from repro.stencils.data import init_domain, reduced_domain
+
+
+def rows():
+    out = []
+    for name, spec in TABLE2.items():
+        p = plan(spec, rl.TPU_V5E)
+        shape = reduced_domain(spec, 96)
+        x = init_domain(spec, shape)
+        t = min(p.t, 4 if spec.ndim == 3 else 6)
+        us = time_fn(lambda: ops.ebisu_stencil(x, spec, t, interpret=True),
+                     warmup=1, iters=3)
+        derived = (f"t={p.t}|{p.pp.pp_cells_per_s/1e9:.0f}GCells/s|"
+                   f"{p.pp.bottleneck}|a_sm={spec.a_sm_rst}/{spec.a_sm}")
+        out.append((f"table2/{name}", us, derived))
+    return out

@@ -1,0 +1,31 @@
+"""3-D heat-equation (j3d7pt) with the EBISU streaming kernel + the
+distributed deep-halo schedule — the paper's flagship 3-D case end-to-end.
+
+Run:  PYTHONPATH=src python examples/stencil_heat_3d.py
+"""
+import jax.numpy as jnp
+
+from repro.core import roofline as rl
+from repro.core.planner import plan
+from repro.core.stencil_spec import get
+from repro.kernels import ops, ref
+from repro.stencils.data import init_domain
+
+spec = get("j3d7pt")
+p_tpu = plan(spec, rl.TPU_V5E)
+p_a100 = plan(spec, rl.A100_FP64)
+print(f"A100 plan: t={p_a100.t} tile={p_a100.block}   "
+      f"TPU plan: t={p_tpu.t} tile={p_tpu.block}")
+print(f"-> the paper's thesis on TPU: {p_tpu.vmem_bytes/2**20:.0f} MiB VMEM "
+      f"affords t={p_tpu.t} vs the A100's t={p_a100.t}")
+
+x = init_domain(spec, (40, 24, 32))
+t = 4
+y = ops.ebisu_stencil(x, spec, t, interpret=True)
+err = float(jnp.abs(y - ref.reference(x, spec, t)).max())
+print(f"streaming multi-queue kernel, t={t}: maxerr={err:.2e}")
+assert err < 1e-4
+
+# total heat is conserved up to boundary outflow (sanity physics check)
+assert float(y.sum()) <= float(x.sum()) + 1e-3
+print("OK — 3-D heat stencil with circular multi-queue streaming.")

@@ -1,0 +1,42 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+Uses the real framework path: config -> mesh -> sharded params/optimizer ->
+prefetching data pipeline -> jitted train_step -> async checkpoints ->
+resume.  On CPU this runs a genuinely ~100M model (mamba2-130m at full size
+but short sequences) — pass --tiny for a seconds-long smoke.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--tiny]
+"""
+import argparse
+import dataclasses
+import tempfile
+
+import repro.configs as C
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced config, 40 steps (CI-speed)")
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+
+    with tempfile.TemporaryDirectory() as d:
+        if args.tiny:
+            params, state, losses = train(
+                "mamba2-130m", steps=args.steps or 40, batch=8, seq=64,
+                reduced=True, ckpt_dir=d, ckpt_every=20, lr=1e-2)
+        else:
+            # full mamba2-130m (130M params) — a few hundred steps
+            params, state, losses = train(
+                "mamba2-130m", steps=args.steps or 200, batch=4, seq=256,
+                reduced=False, ckpt_dir=d, ckpt_every=100, lr=3e-4)
+        drop = losses[0] - losses[-1]
+        print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} (drop {drop:.3f})")
+        assert drop > 0.05, "training did not reduce loss"
+        print("OK — end-to-end training works (with async checkpoints).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Render the §Roofline markdown table from results/dryrun into EXPERIMENTS.md."""
+import glob
+import json
+
+rows = []
+for f in sorted(glob.glob("results/dryrun/*__single.json")):
+    r = json.load(open(f))
+    arch, shape = r["arch"], r["shape"]
+    if r["status"] == "skipped":
+        rows.append(f"| {arch} | {shape} | — | — | — | skip | — | — | {r['reason']} |")
+        continue
+    t = r["terms"]
+    u = r.get("useful_flops_ratio")
+    rf = r.get("roofline_fraction")
+    multi = f.replace("__single", "__multi")
+    try:
+        mok = json.load(open(multi))["status"]
+    except Exception:
+        mok = "?"
+    rows.append(
+        f"| {arch} | {shape} | {t['compute_s']:.3f} | {t['memory_s']:.3f} | "
+        f"{t['collective_s']:.3f} | {r['dominant'].replace('_s','')} | "
+        f"{u and round(u,2) or '—'} | **{rf:.4f}** | "
+        f"{'✓' if r['hbm_ok'] else '✗ (see §Dry-run)'} /{mok[0]} |")
+
+table = "\n".join([
+    "| arch | shape | compute s | memory s | collective s | dom | useful | roofline | hbm / multi-pod |",
+    "|---|---|---|---|---|---|---|---|---|",
+    *rows,
+])
+src = open("EXPERIMENTS.md").read()
+src = src.replace("<!-- ROOFLINE_TABLE -->", table)
+open("EXPERIMENTS.md", "w").write(src)
+print(f"inserted {len(rows)} rows")

@@ -1,0 +1,123 @@
+"""HLO-text analysis: collective bytes / counts from the compiled module.
+
+``cost_analysis()`` has no collective information, so (per the assignment
+brief) we parse the post-SPMD ``compiled.as_text()`` and sum the sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op.
+
+Two numbers per op:
+  * result_bytes — the op's output tensor size (raw);
+  * wire_bytes   — estimated bytes crossing links per participating device,
+    using ring-algorithm formulas with the group size parsed from
+    replica_groups:
+        all-reduce:          2·(g-1)/g · size
+        all-gather:            (g-1)/g · result size
+        reduce-scatter:        (g-1)/g · input size ≈ (g-1) · result size
+        all-to-all:            (g-1)/g · size
+        collective-permute:    size
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:%?[\w.\-]+\s*=\s*)?"
+    r"(\((?:[^()]|\([^()]*\))*\)|[\w\[\],{}\/ ]+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    count: dict
+    result_bytes: dict
+    wire_bytes: dict
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return float(sum(self.wire_bytes.values()))
+
+    @property
+    def total_count(self) -> int:
+        return int(sum(self.count.values()))
+
+    def as_dict(self):
+        return {"count": dict(self.count),
+                "result_bytes": {k: float(v) for k, v in
+                                 self.result_bytes.items()},
+                "wire_bytes": {k: float(v) for k, v in
+                               self.wire_bytes.items()},
+                "total_wire_bytes": self.total_wire_bytes,
+                "total_count": self.total_count}
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(1, len(ids))
+    m = _GROUPS_V2_RE.search(line)
+    if m:  # iota v2 form [num_groups,group_size]
+        return max(1, int(m.group(2)))
+    return default
+
+
+def collective_stats(hlo_text: str, n_devices: int) -> CollectiveStats:
+    count: dict = defaultdict(int)
+    result_bytes: dict = defaultdict(float)
+    wire_bytes: dict = defaultdict(float)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        type_str, op, startdone = m.group(1), m.group(2), m.group(3)
+        if startdone == "-done":
+            continue  # counted at -start
+        size = _shape_bytes(type_str)
+        g = _group_size(line, n_devices)
+        if op == "all-reduce":
+            wire = 2 * (g - 1) / g * size
+        elif op == "all-gather":
+            wire = (g - 1) / g * size
+        elif op == "reduce-scatter":
+            wire = (g - 1) * size          # input ≈ g × result
+        elif op == "all-to-all":
+            wire = (g - 1) / g * size
+        else:                              # collective-permute
+            wire = size
+        count[op] += 1
+        result_bytes[op] += size
+        wire_bytes[op] += wire
+    return CollectiveStats(dict(count), dict(result_bytes), dict(wire_bytes))
+
+
+def scan_trip_counts(hlo_text: str) -> int:
+    """Max while-loop trip count (collectives inside run that many times) —
+    used to scale per-iteration collective counts for scanned layers."""
+    trips = [int(t) for t in re.findall(r"trip_count=(\d+)", hlo_text)]
+    return max(trips) if trips else 1

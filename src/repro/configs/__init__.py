@@ -1,0 +1,9 @@
+"""Architecture registry: one module per assigned architecture."""
+from repro.configs.base import (ArchConfig, SHAPES, get_config,  # noqa: F401
+                                list_archs, register)
+
+# importing the modules registers the configs
+from repro.configs import (  # noqa: F401,E402
+    zamba2_2p7b, hubert_xlarge, mamba2_130m, h2o_danube_1p8b, minicpm_2b,
+    gemma_7b, qwen3_14b, internvl2_1b, qwen3_moe_235b_a22b,
+    granite_moe_3b_a800m, stencil_suite)

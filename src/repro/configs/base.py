@@ -1,0 +1,223 @@
+"""ArchConfig: every assigned architecture as a selectable config.
+
+Shapes (assignment brief): each (arch × shape) cell is one dry-run program —
+``train_4k`` lowers train_step; ``prefill_32k`` lowers the serving prefill;
+``decode_32k`` / ``long_500k`` lower one cached decode step (serve_step).
+
+Skip rules (recorded in DESIGN.md §6):
+  * encoder-only (hubert) has no decode → decode_32k & long_500k skipped;
+  * long_500k needs sub-quadratic attention → runs for ssm/hybrid and for
+    SWA archs (window-capped cache); skipped for pure full-attention archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+_REGISTRY: dict[str, "ArchConfig"] = {}
+
+
+def register(cfg: "ArchConfig") -> "ArchConfig":
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> "ArchConfig":
+    return _REGISTRY[name]
+
+
+def list_archs() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense|moe|ssm|hybrid|encoder|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int = 1
+    kv_heads: int = 1
+    head_dim: int = 64
+    d_ff: int = 0
+    vocab: int = 32000
+    act: str = "swiglu"
+    norm: str = "rms"
+    qk_norm: bool = False
+    swa_window: int | None = None
+    rope_theta: float | None = 10000.0
+    embed_scale: bool = False
+    tie_embeddings: bool = True
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_aux_weight: float = 0.01
+    moe_capacity: float = 1.25
+    # SSM
+    ssm_state: int = 0
+    ssm_inner: int = 0
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_chunk: int = 128
+    # hybrid
+    attn_every: int = 6
+    # vlm stub frontend
+    vlm_patch_dim: int = 1024
+    vlm_patches: int = 256
+    # execution
+    activ_dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    attention_impl: str = "flash_jnp"   # flash_jnp | boundary_stub (dry-run
+    # stand-in for the Pallas flash kernel: same q/k/v/o boundary traffic,
+    # no S x S intermediates — used for kernel-adjusted roofline terms)
+    ssm_impl: str = "chunked_jnp"       # chunked_jnp | boundary_stub (ditto
+    # for a fused SSD kernel: projections + output kept, no chunk-state
+    # round-trips — the identified next kernel for the SSM cells)
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    loss_chunk: int = 512
+    microbatches: int = 1
+    schedule: str = "cosine"         # cosine | wsd (minicpm)
+    sharding: str = "tp"   # tp (Megatron tensor-parallel over 'model') |
+    # fsdp (params fully sharded over ALL axes, batch over all axes —
+    # beyond-paper §Perf scheme for dense train cells: ~11x less wire)
+    # mesh hints (set by with_mesh)
+    dp_axes: Any = ("data",)
+    mesh_dp: int = 1
+    mesh_model: int = 1
+    source: str = ""                 # provenance note
+
+    # ------------------------------------------------------------- derived --
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_inner // self.ssm_head_dim if self.ssm_inner else 0
+
+    @property
+    def n_experts_padded(self) -> int:
+        if not self.n_experts:
+            return 0
+        return ((self.n_experts + 15) // 16) * 16
+
+    def n_params(self) -> int:
+        from repro.models import transformer
+        from repro.models.params import tree_count
+        return tree_count(transformer.param_defs(self))
+
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE: top_k of n_experts)."""
+        n = self.n_params()
+        if self.family == "moe":
+            from repro.models import moe as moe_mod
+            per_expert = self.d_model * self.d_ff * (
+                3 if self.act in ("swiglu", "geglu") else 2)
+            n -= self.n_layers * per_expert * (self.n_experts_padded
+                                               - self.top_k)
+        return n
+
+    # ------------------------------------------------------------- shaping --
+    def supports(self, shape_name: str) -> tuple[bool, str]:
+        kind = SHAPES[shape_name]["kind"]
+        if self.family == "encoder" and kind == "decode":
+            return False, "encoder-only: no decode step"
+        if shape_name == "long_500k":
+            subq = self.family in ("ssm", "hybrid") or self.swa_window
+            if not subq:
+                return False, "pure full-attention: long_500k skipped"
+        return True, ""
+
+    def with_mesh(self, mesh) -> "ArchConfig":
+        import math
+        axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        if self.sharding == "fsdp":
+            dp = tuple(a for a in ("pod", "data", "model") if a in axes)
+            # NOTE §Perf iter 4 (refuted): disabling remat under FSDP
+            # raised the memory term 2.27->6.76 s (saved activations
+            # round-trip HBM: 110 GB temps) — recompute beats spill.
+            return dataclasses.replace(
+                self, dp_axes=dp, microbatches=1,
+                mesh_dp=math.prod(axes.values()), mesh_model=1)
+        dp = tuple(a for a in ("pod", "data") if a in axes)
+        return dataclasses.replace(
+            self, dp_axes=dp if len(dp) > 1 else (dp[0] if dp else None),
+            mesh_dp=math.prod(v for k, v in axes.items()
+                              if k in ("pod", "data")),
+            mesh_model=axes.get("model", 1))
+
+    def input_specs(self, shape_name: str):
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        info = SHAPES[shape_name]
+        s, b, kind = info["seq"], info["batch"], info["kind"]
+        i32 = jnp.int32
+        if kind == "train":
+            if self.family == "encoder":
+                return {"frames": jax.ShapeDtypeStruct((b, s, self.d_model),
+                                                       self.activ_dtype),
+                        "mask": jax.ShapeDtypeStruct((b, s), jnp.bool_),
+                        "labels": jax.ShapeDtypeStruct((b, s), i32)}
+            if self.family == "vlm":
+                st = s - self.vlm_patches
+                return {"tokens": jax.ShapeDtypeStruct((b, st), i32),
+                        "patches": jax.ShapeDtypeStruct(
+                            (b, self.vlm_patches, self.vlm_patch_dim),
+                            self.activ_dtype),
+                        "labels": jax.ShapeDtypeStruct((b, st), i32)}
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                    "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if kind == "prefill":
+            if self.family == "encoder":
+                return {"frames": jax.ShapeDtypeStruct((b, s, self.d_model),
+                                                       self.activ_dtype)}
+            if self.family == "vlm":
+                st = s - self.vlm_patches
+                return {"tokens": jax.ShapeDtypeStruct((b, st), i32),
+                        "patches": jax.ShapeDtypeStruct(
+                            (b, self.vlm_patches, self.vlm_patch_dim),
+                            self.activ_dtype)}
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        # decode: one new token against a seq-long cache
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+    def input_pspecs(self, shape_name: str):
+        dp = self.dp_axes
+        b = SHAPES[shape_name]["batch"]
+        bs = dp if (self.mesh_dp > 1 and b % self.mesh_dp == 0) else None
+        specs = {}
+        for k, v in self.input_specs(shape_name).items():
+            specs[k] = P(bs, *([None] * (len(v.shape) - 1)))
+        return specs
+
+    def reduced(self) -> "ArchConfig":
+        """CPU-sized config of the same family for smoke tests."""
+        kw = dict(
+            n_layers=4 if self.family == "hybrid" else 2,
+            d_model=64, n_heads=4, kv_heads=2, head_dim=16,
+            d_ff=128, vocab=256,
+            activ_dtype=jnp.float32, param_dtype=jnp.float32,
+            remat=False, q_chunk=64, kv_chunk=64, loss_chunk=64,
+            ssm_chunk=16, attn_every=2,
+            vlm_patch_dim=32, vlm_patches=8, microbatches=1,
+        )
+        if self.family == "moe":
+            # drop-free capacity so smoke tests can assert exact decode ==
+            # forward equivalence (capacity truncation is order-dependent)
+            kw.update(n_experts=8, top_k=2, moe_capacity=16.0)
+        if self.family in ("ssm", "hybrid"):
+            kw.update(ssm_inner=128, ssm_head_dim=32, ssm_state=16,
+                      ssm_groups=1)
+        if self.family == "encoder":
+            kw.update(kv_heads=4)   # hubert is MHA
+        if self.kv_heads == self.n_heads:
+            kw.update(kv_heads=4)
+        return dataclasses.replace(self, **kw)

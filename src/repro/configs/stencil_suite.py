@@ -1,0 +1,11 @@
+"""The paper's own workload as an arch config: Table-2 stencil suite.
+
+Not an LM — selectable via --arch stencil-suite in the launcher/dry-run;
+its "shapes" are the paper's domains, distributed over the production mesh
+with deep-halo temporal blocking (core/distributed.py).
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="stencil-suite", family="stencil", n_layers=0, d_model=0,
+    source="ICS'23 EBISU Table 2"))

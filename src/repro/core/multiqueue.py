@@ -1,0 +1,66 @@
+"""§4.2 of the paper: the (circular) multi-queue data structure.
+
+A multi-queue is one queue per temporal-blocking step; queue ``s`` holds the
+most recent ``2·rad+1`` planes of the time-``s`` field.  When input plane ``z``
+(time 0) is enqueued, planes ``z - s·rad`` of time ``s`` become computable for
+``s = 1..t`` ("streaming"); dequeue of step ``s`` overlaps enqueue of step
+``s+1`` (paper Fig. 5).
+
+Two circular addressing modes (§4.2.2):
+  * ``computing``: ring size is a power of two so slot = ``z & (R-1)``
+    (the paper's `index % range == index & (range-1)` trick);
+  * ``shifting``: indices are physically shifted at the per-tile "shuffle".
+
+This module is the *index algebra*, shared by the Pallas kernels (which bake
+it into VMEM scratch indexing) and by the hypothesis property tests (which
+check the invariants on a host-side queue simulation).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.planner import next_pow2
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiQueueLayout:
+    depth: int          # t, number of temporal steps (queues)
+    radius: int         # stencil radius
+    ring: int           # slots per queue (pow2 for 'computing' mode)
+    addressing: str = "computing"
+
+    @classmethod
+    def make(cls, depth: int, radius: int, addressing: str = "computing"):
+        need = 2 * radius + 2            # 2·rad+1 live planes + 1 write slot
+        ring = next_pow2(need) if addressing == "computing" else need
+        return cls(depth, radius, ring, addressing)
+
+    # ---------------------------------------------------------------- slots
+    def slot(self, z: int) -> int:
+        """Ring slot for plane index z (same algebra for every queue)."""
+        if self.addressing == "computing":
+            return z & (self.ring - 1)
+        return z % self.ring
+
+    def producible(self, s: int, z_in: int) -> int:
+        """Highest plane of time-step ``s`` computable once input plane
+        ``z_in`` (time 0) has been enqueued: z_in - s·rad."""
+        return z_in - s * self.radius
+
+    def window(self, s: int, z_out: int) -> list[int]:
+        """Plane indices of time-step ``s-1`` read to produce plane ``z_out``
+        of time-step ``s``."""
+        return list(range(z_out - self.radius, z_out + self.radius + 1))
+
+    def live_span(self) -> int:
+        """Number of planes that must stay live per queue (ring lower bound)."""
+        return 2 * self.radius + 1
+
+    def total_planes(self) -> int:
+        return self.depth * self.ring
+
+    def check(self) -> None:
+        """Invariants the kernels rely on."""
+        assert self.ring >= self.live_span() + 1, "write slot would clobber a live plane"
+        if self.addressing == "computing":
+            assert self.ring & (self.ring - 1) == 0, "computing mode needs pow2 ring"

@@ -1,0 +1,185 @@
+"""§5 of the paper: Practical Attainable Performance  PP = P × V.
+
+``P`` is a three-pressure-point roofline (device memory, scratchpad, compute):
+
+    T_gm  = a_gm · D_gm / B_gm · S_cell                     (Eq 2)
+    T_sm  = a_sm · D_sm · t / B_sm · S_cell                 (Eq 3)
+    T_cmp = a_cmp · D_cmp · t / THR_cmp                     (Eq 4)
+    T     = max(T_gm, T_sm, T_cmp)                          (Eq 5)
+    P     = D_all · t / T                                   (Eq 7)
+
+``V`` is the valid fraction lost to overlapped-tiling redundancy (Eq 8/9) or to
+device-wide synchronization (Eq 11).
+
+Two hardware models are registered:
+  * ``A100_FP64`` — the paper's platform, with the paper's published constants;
+    used by the tests to check that this implementation of the model reproduces
+    the paper's own derivations (t ≥ 6.3 for j2d5pt, t > 18.34 for j3d7pt,
+    V_Dtile ≈ 63% / ≈ 67%, …).
+  * ``TPU_V5E`` — the target platform for this repo (f32 cells, VPU compute).
+    HBM/ICI/MXU constants are the assignment's given numbers; VMEM bandwidth
+    and VPU f32 throughput are documented estimates (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.stencil_spec import StencilSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    name: str
+    b_gm: float          # device memory bandwidth, B/s
+    b_sm: float          # scratchpad bandwidth, B/s
+    thr_cmp: float       # stencil-relevant compute throughput, FLOP/s
+    t_dsync: float       # device-wide sync overhead, s
+    s_cell: int          # bytes per cell
+    onchip_bytes: float  # scratchpad capacity usable by one resident tile
+    onchip_device_bytes: float = 0.0  # device-wide aggregate (device tiling:
+    # the paper's 3-D scheme spans ALL SMs' shared memory via grid sync)
+    # --- distribution (TPU only; 0 on single-GPU models) ---
+    b_ici: float = 0.0   # per-link ICI bandwidth, B/s
+    ici_links: int = 0   # links per chip usable for halo exchange
+    hbm_bytes: float = 0.0
+    mxu_flops: float = 0.0        # bf16 matmul peak (for LM roofline)
+    mem_latency: float = 0.0      # device-memory latency, s (Little's law)
+
+
+# The paper's constants (§6.2.1, §5.2.2, Table in §6): FP64 cells.
+A100_FP64 = HardwareModel(
+    name="a100-fp64",
+    b_gm=1555e9,
+    b_sm=19.49e12,
+    thr_cmp=9.7e12,          # A100 FP64 peak (non-tensor) ~9.7 TFLOP/s
+    t_dsync=1.2e-6,          # grid sync, measured by [57] (paper §5.2.2)
+    s_cell=8,
+    onchip_bytes=164e3,      # shared memory per SM (A100)
+    onchip_device_bytes=17.7e6,  # 108 SMs aggregate (paper §1: 17,712 KB)
+    mem_latency=400e-9,
+)
+
+# Target platform. Given constants: 197 TFLOP/s bf16 MXU, 819 GB/s HBM,
+# ~50 GB/s/link ICI. Estimates (documented in DESIGN.md): VMEM bw ~16 TB/s,
+# VPU f32 ~4 TFLOP/s, per-grid-step overhead ~1 µs, VMEM 128 MiB.
+TPU_V5E = HardwareModel(
+    name="tpu-v5e-f32",
+    b_gm=819e9,
+    b_sm=16e12,
+    thr_cmp=7.9e12,          # VPU f32 ~ MXU/25 (documented estimate)
+    t_dsync=1.0e-6,
+    s_cell=4,
+    onchip_bytes=128 * 2**20,
+    onchip_device_bytes=128 * 2**20,  # one core per v5e chip
+    b_ici=50e9,
+    ici_links=4,
+    hbm_bytes=16 * 2**30,
+    mxu_flops=197e12,
+    mem_latency=500e-9,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineResult:
+    t_gm: float
+    t_sm: float
+    t_cmp: float
+    bottleneck: str          # 'gm' | 'sm' | 'cmp'
+    p_cells_per_s: float     # Eq 7 (attainable)
+    v: float                 # valid fraction
+    pp_cells_per_s: float    # Eq 1 (practical attainable)
+    gflops: float            # PP expressed in FLOP/s via flops_per_cell
+
+    @property
+    def t_stencil(self) -> float:
+        return max(self.t_gm, self.t_sm, self.t_cmp)
+
+
+def component_times(spec: StencilSpec, t: int, hw: HardwareModel, *,
+                    rst: bool = True,
+                    d_gm: float | None = None,
+                    d_sm: float | None = None,
+                    d_cmp: float | None = None,
+                    d_all: float | None = None):
+    """Eq 2–4 for a domain of D cells (defaults: D_gm = D_sm = D_cmp)."""
+    d_all = float(d_all if d_all is not None else math.prod(spec.domain))
+    d_gm = float(d_gm if d_gm is not None else d_all)
+    d_sm = float(d_sm if d_sm is not None else d_all)
+    d_cmp = float(d_cmp if d_cmp is not None else d_all)
+    a_sm = spec.a_sm_rst if rst else spec.a_sm
+    t_gm = spec.a_gm * d_gm * hw.s_cell / hw.b_gm
+    t_sm = a_sm * d_sm * t * hw.s_cell / hw.b_sm
+    t_cmp = spec.flops_per_cell * d_cmp * t / hw.thr_cmp
+    return t_gm, t_sm, t_cmp, d_all
+
+
+def v_smtile(spec: StencilSpec, t: int, tile: tuple[int, ...]) -> float:
+    """Eq 8 (2-D) / Eq 9 (3-D): valid fraction under overlapped tiling."""
+    h = spec.halo(t)
+    if spec.ndim == 2:
+        return max(0.0, (tile[0] - h) / tile[0])
+    return max(0.0, (tile[0] - h) / tile[0]) * max(0.0, (tile[1] - h) / tile[1])
+
+
+def v_dtile(t_stencil: float, hw: HardwareModel, n_syncs: int = 1) -> float:
+    """Eq 11: valid fraction under device tiling with n syncs per tile."""
+    return t_stencil / (t_stencil + hw.t_dsync * n_syncs)
+
+
+def attainable(spec: StencilSpec, t: int, hw: HardwareModel, *,
+               rst: bool = True, v: float = 1.0, **dkw) -> RooflineResult:
+    t_gm, t_sm, t_cmp, d_all = component_times(spec, t, hw, rst=rst, **dkw)
+    t_stencil = max(t_gm, t_sm, t_cmp)
+    bn = ("gm", "sm", "cmp")[(t_gm, t_sm, t_cmp).index(t_stencil)]
+    p = d_all * t / t_stencil
+    pp = p * v
+    return RooflineResult(t_gm, t_sm, t_cmp, bn, p, v, pp,
+                          gflops=pp * spec.flops_per_cell)
+
+
+# ------------------------------------------------------------------- §6.2 ---
+def desired_depth(spec: StencilSpec, hw: HardwareModel, *, rst: bool = True) -> float:
+    """Eq 17 with D_sm == D_gm: minimum t that moves the bottleneck gm→sm."""
+    a_sm = spec.a_sm_rst if rst else spec.a_sm
+    return (spec.a_gm / hw.b_gm) * (hw.b_sm / a_sm)
+
+
+def desired_depth_device_tiled(spec: StencilSpec, hw: HardwareModel,
+                               tile: tuple[int, int], *, rst: bool = True) -> float:
+    """Eq 18/19: depth at which sm time covers the (halo-inflated) gm time.
+
+    D_gm = tile_x·tile_y + (tile_x+tile_y)·2·t·rad ; D_sm = tile_x·tile_y.
+    Solve  a_sm·D_sm·t/B_sm  >  a_gm·D_gm/B_gm  for t.
+    """
+    a_sm = spec.a_sm_rst if rst else spec.a_sm
+    tx, ty = tile
+    d_sm = tx * ty
+    # a_sm·d_sm/B_sm · t  >  a_gm·(d_sm + (tx+ty)·2·rad·t)/B_gm
+    lhs_slope = a_sm * d_sm / hw.b_sm
+    rhs_slope = spec.a_gm * (tx + ty) * 2 * spec.radius / hw.b_gm
+    rhs_const = spec.a_gm * d_sm / hw.b_gm
+    denom = lhs_slope - rhs_slope
+    if denom <= 0:
+        return math.inf
+    return rhs_const / denom
+
+
+# ------------------------------------------------------------------- §6.4 ---
+def min_tile_width(spec: StencilSpec, hw: HardwareModel, *, rst: bool = True) -> float:
+    """Eq 23: minimum square-tile width so halo gm traffic stays sub-dominant."""
+    a_sm = spec.a_sm_rst if rst else spec.a_sm
+    return 4 * spec.a_gm * hw.b_sm / (a_sm * hw.b_gm) * spec.radius
+
+
+# --------------------------------------------------- distributed extension ---
+def halo_exchange_time(spec: StencilSpec, t: int, hw: HardwareModel,
+                       shard_shape: tuple[int, ...], n_neighbors: int = 2) -> float:
+    """Beyond-paper: ICI time for a deep-halo (t·rad) exchange, amortized over
+    the t steps it buys. Exchanging once per t steps divides the per-step
+    collective cost by t — EBISU's sync amortization applied across chips."""
+    if hw.b_ici <= 0:
+        return 0.0
+    face = math.prod(shard_shape[1:]) if len(shard_shape) > 1 else 1
+    halo_cells = spec.halo(t) * face * n_neighbors
+    return halo_cells * hw.s_cell / (hw.b_ici * max(1, hw.ici_links // 2))

@@ -1,0 +1,58 @@
+"""Public entry points for the stencil kernels.
+
+``ebisu_stencil`` dispatches on dimensionality and picks interpret mode
+automatically (Pallas-TPU lowering on TPU backends, interpreter on CPU — the
+kernels are *written* for TPU BlockSpec/VMEM tiling and *validated* on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.planner import EbisuPlan, plan as make_plan
+from repro.core.roofline import TPU_V5E
+from repro.core.stencil_spec import StencilSpec, lift_2d_to_3d
+from repro.kernels import ref as ref_ops
+from repro.kernels.stencil2d import ebisu2d
+from repro.kernels.stencil3d import ebisu3d
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ebisu_stencil(x: jnp.ndarray, spec: StencilSpec, t: int, *,
+                  plan: EbisuPlan | None = None,
+                  mode: str = "fused",
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """Apply ``t`` temporally-blocked stencil steps (EBISU execution)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    if spec.ndim == 2:
+        if mode == "stream":
+            # the paper's 2-D scheme: stream y through the circular
+            # multi-queue (no overlapped halo along the streamed dim)
+            zc = plan.block[0] if plan is not None else max(64, spec.halo(t))
+            zc = max(zc, spec.halo(t))
+            y = ebisu3d(x[:, None, :], lift_2d_to_3d(spec), t, zc=zc,
+                        interpret=interpret)
+            return y[:, 0, :]
+        bh = plan.block[0] if plan is not None else max(128, spec.halo(t))
+        bh = max(bh, spec.halo(t))
+        return ebisu2d(x, spec, t, bh=bh, mode=mode, interpret=interpret)
+    zc = plan.block[0] if plan is not None else max(16, spec.halo(t))
+    zc = max(zc, spec.halo(t))
+    return ebisu3d(x, spec, t, zc=zc, interpret=interpret)
+
+
+def ebisu_stencil_planned(x: jnp.ndarray, spec: StencilSpec, *,
+                          hw=TPU_V5E, t: int | None = None,
+                          interpret: bool | None = None):
+    """Plan (t, tiles) with the §6 planner, then run. Returns (out, plan)."""
+    p = make_plan(spec, hw, domain=x.shape)
+    depth = t if t is not None else p.t
+    return ebisu_stencil(x, spec, depth, plan=p, interpret=interpret), p
+
+
+def naive_stencil(x: jnp.ndarray, spec: StencilSpec, t: int) -> jnp.ndarray:
+    """Un-blocked baseline (one global-memory round trip per step)."""
+    return ref_ops.reference(x, spec, t)

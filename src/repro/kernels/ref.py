@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the stencil kernels.
+
+Semantics: zero (Dirichlet) boundary — cells outside the domain read as 0 at
+*every* time step.  ``reference(x, spec, t)`` applies ``t`` plain steps; every
+temporally-blocked implementation in this repo must match it exactly (up to
+dtype rounding).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.stencil_spec import StencilSpec
+
+
+def _shift_zero(xp: jnp.ndarray, off, rad: int, shape) -> jnp.ndarray:
+    """Slice a zero-padded array to realize a tap shift with zero fill."""
+    idx = tuple(
+        slice(rad + o, rad + o + n) for o, n in zip(off, shape)
+    )
+    return xp[idx]
+
+
+def stencil_step(x: jnp.ndarray, spec: StencilSpec) -> jnp.ndarray:
+    """One Jacobi step of ``spec`` with zero boundaries. Works for 2-D / 3-D."""
+    rad = spec.radius
+    pad = [(rad, rad)] * x.ndim
+    xp = jnp.pad(x, pad)
+    acc = None
+    for off, c in spec.taps:
+        term = jnp.asarray(c, x.dtype) * _shift_zero(xp, off, rad, x.shape)
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def reference(x: jnp.ndarray, spec: StencilSpec, t: int) -> jnp.ndarray:
+    """``t`` un-blocked steps — the ground truth for temporal blocking."""
+    def body(_, v):
+        return stencil_step(v, spec)
+    return jax.lax.fori_loop(0, t, body, x) if t > 0 else x
+
+
+def reference_unrolled(x: jnp.ndarray, spec: StencilSpec, t: int) -> jnp.ndarray:
+    """Python-loop variant (differentiable / easier to inspect)."""
+    for _ in range(t):
+        x = stencil_step(x, spec)
+    return x

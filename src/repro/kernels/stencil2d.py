@@ -1,0 +1,137 @@
+"""EBISU-2D Pallas kernel: temporally-blocked strip device-tiles.
+
+TPU mapping of the paper's 2-D scheme (§4.1, §6.3.1, §6.4.1):
+
+  * Each Pallas grid step is a *device tile*: one full-width strip of
+    ``bh`` output rows, resident in VMEM while ``t`` time steps are applied
+    ("one tile at a time" — the TPU grid is sequential, so low occupancy is
+    the native execution model).
+  * The strip's y-halo (``HALO = t·rad`` rows on each side) is assembled from
+    three shifted BlockSpec views of the input (blocks i-1, i, i+1) — Pallas
+    blocks cannot overlap, so neighbor views stand in for overlapped tiling.
+  * ``mode='fused'`` chains the ``t`` steps as pure jnp values — Mosaic keeps
+    intermediates in VREGs/VMEM without explicit round-trips: the TPU
+    realization of *redundant register streaming* (§4.3.3).
+  * ``mode='scratch'`` ping-pongs two explicit VMEM scratch buffers — the
+    paper's double-buffering, i.e. lazy streaming with a single queue
+    (§4.3.2); kept for the Fig-9-style ablation.
+
+Boundary semantics: zero outside the domain at every step.  The kernel
+re-applies an iota mask (global row/col ids) after assembly and after every
+fused step, so wrap-around garbage from the roll-based tap shifts stays
+confined to rows that can never reach the output (see DESIGN.md §8.1-2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.stencil_spec import StencilSpec
+
+
+def _apply_taps_2d(vals: jnp.ndarray, taps) -> jnp.ndarray:
+    """One stencil step on a (SH, Wp) strip using roll-based shifts."""
+    acc = None
+    for (dy, dx), c in taps:
+        term = vals
+        if dy:
+            term = jnp.roll(term, -dy, axis=0)
+        if dx:
+            term = jnp.roll(term, -dx, axis=1)
+        term = term * jnp.float32(c)
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def _strip_kernel(prev_ref, cur_ref, next_ref, out_ref, *scratch,
+                  taps: Sequence, t: int, rad: int, bh: int, halo: int,
+                  height: int, width: int, mode: str):
+    i = pl.program_id(0)
+    sh = bh + 2 * halo
+
+    row0 = i * bh - halo
+    rows = jax.lax.broadcasted_iota(jnp.int32, (sh, prev_ref.shape[1]), 0) + row0
+    cols = jax.lax.broadcasted_iota(jnp.int32, (sh, prev_ref.shape[1]), 1)
+    valid = (rows >= 0) & (rows < height) & (cols >= rad) & (cols < rad + width)
+
+    # --- assemble the haloed strip from the three neighbor views ------------
+    top = prev_ref[bh - halo:, :] if halo else None
+    mid = cur_ref[...]
+    bot = next_ref[:halo, :] if halo else None
+    parts = [p for p in (top, mid, bot) if p is not None]
+    vals = jnp.concatenate(parts, axis=0) if len(parts) > 1 else mid
+    vals = jnp.where(valid, vals.astype(jnp.float32), 0.0)
+
+    if mode == "fused":
+        for _ in range(t):
+            vals = jnp.where(valid, _apply_taps_2d(vals, taps), 0.0)
+        out_ref[...] = vals[halo:halo + bh, :].astype(out_ref.dtype)
+        return
+
+    # --- 'scratch': explicit VMEM double-buffering (paper's lazy streaming /
+    # double-buffer special case) --------------------------------------------
+    buf0, buf1 = scratch
+    buf0[...] = vals
+    for s in range(t):
+        src, dst = (buf0, buf1) if s % 2 == 0 else (buf1, buf0)
+        dst[...] = jnp.where(valid, _apply_taps_2d(src[...], taps), 0.0)
+    final = buf1 if t % 2 == 1 else buf0
+    out_ref[...] = final[halo:halo + bh, :].astype(out_ref.dtype)
+
+
+def _pad_to(n: int, m: int) -> int:
+    return (n + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "t", "bh", "mode",
+                                             "interpret"))
+def ebisu2d(x: jnp.ndarray, spec: StencilSpec, t: int, *, bh: int = 128,
+            mode: str = "fused", interpret: bool = True) -> jnp.ndarray:
+    """Apply ``t`` temporally-blocked steps of ``spec`` to a 2-D field."""
+    assert spec.ndim == 2
+    height, width = x.shape
+    rad, halo = spec.radius, spec.halo(t)
+    assert halo <= bh, f"neighbor-block halo needs t*rad={halo} <= bh={bh}"
+
+    hp = _pad_to(height, bh)
+    wp = _pad_to(rad + width + rad, 128)
+    xp = jnp.zeros((hp, wp), jnp.float32).at[:height, rad:rad + width].set(
+        x.astype(jnp.float32))
+    grid = hp // bh
+    sh = bh + 2 * halo
+
+    def idx_prev(i):
+        return (jnp.maximum(i - 1, 0), 0)
+
+    def idx_cur(i):
+        return (i, 0)
+
+    def idx_next(i):
+        return (jnp.minimum(i + 1, grid - 1), 0)
+
+    kern = functools.partial(
+        _strip_kernel, taps=spec.taps, t=t, rad=rad, bh=bh, halo=halo,
+        height=height, width=width, mode=mode)
+
+    scratch_shapes = []
+    if mode == "scratch":
+        scratch_shapes = [pltpu.VMEM((sh, wp), jnp.float32),
+                          pltpu.VMEM((sh, wp), jnp.float32)]
+
+    out = pl.pallas_call(
+        kern,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((bh, wp), idx_prev),
+                  pl.BlockSpec((bh, wp), idx_cur),
+                  pl.BlockSpec((bh, wp), idx_next)],
+        out_specs=pl.BlockSpec((bh, wp), idx_cur),
+        out_shape=jax.ShapeDtypeStruct((hp, wp), x.dtype),
+        scratch_shapes=scratch_shapes,
+        interpret=interpret,
+    )(xp, xp, xp)
+    return out[:height, rad:rad + width]

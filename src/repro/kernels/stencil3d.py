@@ -1,0 +1,167 @@
+"""EBISU-3D Pallas kernel: z-streaming with a circular multi-queue in VMEM.
+
+This is the paper's Fig. 5/6 scheme, verbatim, on the TPU memory hierarchy:
+
+  * Each Pallas grid step is a *device tile*: a chunk of ``zc`` output planes.
+    The chunk's z-halo (``HALO = t·rad`` planes each side) comes from three
+    shifted BlockSpec views (overlapped tiling in z — the redundancy cost is
+    exactly the paper's ``V_SMtile`` term, Eq 9).
+  * Inside the kernel, planes stream through a **circular multi-queue**: one
+    ring of ``R = next_pow2(2·rad+2)`` planes per temporal step, held in VMEM
+    scratch.  Ring addressing is the paper's "computing address" mode:
+    ``slot = z & (R-1)`` (§4.2.2).
+  * When input plane ``z`` (time 0) is enqueued, planes ``z - s·rad`` of time
+    ``s`` become computable — dequeue of step ``s`` overlaps enqueue of step
+    ``s+1`` ("seamless time-step transitions").
+  * The final time step is written straight to the output block — lazy
+    streaming's "one sync per tile": a grid step has a single pipeline
+    boundary regardless of depth ``t``.
+
+Boundary semantics: zero outside the domain at every step (planes whose
+global z falls outside [0, Z) are zeroed after compute; y/x pads are re-masked
+every step, so roll-based tap shifts cannot leak across the boundary).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.multiqueue import MultiQueueLayout
+from repro.core.stencil_spec import StencilSpec
+
+
+def _taps_by_dz(taps):
+    groups: dict[int, list] = {}
+    for (dz, dy, dx), c in taps:
+        groups.setdefault(dz, []).append(((dy, dx), c))
+    return sorted(groups.items())
+
+
+def _apply_plane_taps(plane: jnp.ndarray, taps2d) -> jnp.ndarray:
+    acc = None
+    for (dy, dx), c in taps2d:
+        term = plane
+        if dy:
+            term = jnp.roll(term, -dy, axis=0)
+        if dx:
+            term = jnp.roll(term, -dx, axis=1)
+        term = term * jnp.float32(c)
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def _stream_kernel(prev_ref, cur_ref, next_ref, out_ref, buf,
+                   *, groups, t: int, rad: int, zc: int, halo: int,
+                   ring: int, zdim: int, ydim: int, xdim: int):
+    i = pl.program_id(0)
+    yp, xp = cur_ref.shape[1], cur_ref.shape[2]
+    mask = ring - 1
+
+    ys = jax.lax.broadcasted_iota(jnp.int32, (yp, xp), 0)
+    xs = jax.lax.broadcasted_iota(jnp.int32, (yp, xp), 1)
+    valid_yx = (ys >= rad) & (ys < rad + ydim) & (xs >= rad) & (xs < rad + xdim)
+
+    def rd(q, z):
+        return buf[pl.ds(q * ring + (z & mask), 1)][0]
+
+    def wr(q, z, plane):
+        buf[pl.ds(q * ring + (z & mask), 1)] = plane[None]
+
+    def body(zin, _):
+        zg = i * zc - halo + zin           # global z of the incoming plane
+
+        # ---- enqueue input plane zin into queue 0 (time 0) -----------------
+        def fetch(ref, idx):
+            return ref[pl.ds(idx, 1)][0].astype(jnp.float32)
+
+        @pl.when(zin < halo)
+        def _():
+            plane = fetch(prev_ref, zin + zc - halo)
+            ok = valid_yx & (zg >= 0) & (zg < zdim)
+            wr(0, zin, jnp.where(ok, plane, 0.0))
+
+        @pl.when((zin >= halo) & (zin < halo + zc))
+        def _():
+            plane = fetch(cur_ref, zin - halo)
+            ok = valid_yx & (zg >= 0) & (zg < zdim)
+            wr(0, zin, jnp.where(ok, plane, 0.0))
+
+        @pl.when(zin >= halo + zc)
+        def _():
+            plane = fetch(next_ref, zin - halo - zc)
+            ok = valid_yx & (zg >= 0) & (zg < zdim)
+            wr(0, zin, jnp.where(ok, plane, 0.0))
+
+        # ---- advance each deeper queue: plane zin - s·rad of time s --------
+        for s in range(1, t + 1):
+            z_s = zin - s * rad
+            zg_s = i * zc - halo + z_s
+
+            def compute(z_s=z_s, zg_s=zg_s, s=s):
+                acc = None
+                for dz, taps2d in groups:
+                    contrib = _apply_plane_taps(rd(s - 1, z_s + dz), taps2d)
+                    acc = contrib if acc is None else acc + contrib
+                ok = valid_yx & (zg_s >= 0) & (zg_s < zdim)
+                return jnp.where(ok, acc, 0.0)
+
+            if s < t:
+                @pl.when(z_s >= 0)
+                def _(z_s=z_s, s=s, compute=compute):
+                    wr(s, z_s, compute())
+            else:
+                @pl.when((z_s >= halo) & (z_s < halo + zc))
+                def _(z_s=z_s, compute=compute):
+                    out_ref[pl.ds(z_s - halo, 1)] = (
+                        compute()[None].astype(out_ref.dtype))
+        return ()
+
+    jax.lax.fori_loop(0, zc + 2 * halo, body, ())
+
+
+def _pad_to(n: int, m: int) -> int:
+    return (n + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "t", "zc", "interpret"))
+def ebisu3d(x: jnp.ndarray, spec: StencilSpec, t: int, *, zc: int = 16,
+            interpret: bool = True) -> jnp.ndarray:
+    """Apply ``t`` temporally-blocked steps of a 3-D ``spec`` via z-streaming."""
+    assert spec.ndim == 3
+    zdim, ydim, xdim = x.shape
+    rad, halo = spec.radius, spec.halo(t)
+    assert halo <= zc, f"neighbor-block halo needs t*rad={halo} <= zc={zc}"
+    layout = MultiQueueLayout.make(t, rad, "computing")
+    layout.check()
+    ring = layout.ring
+
+    zp = _pad_to(zdim, zc)
+    yp = _pad_to(rad + ydim + rad, 8)
+    xp = _pad_to(rad + xdim + rad, 128)
+    xpad = jnp.zeros((zp, yp, xp), jnp.float32).at[
+        :zdim, rad:rad + ydim, rad:rad + xdim].set(x.astype(jnp.float32))
+    grid = zp // zc
+
+    kern = functools.partial(
+        _stream_kernel, groups=_taps_by_dz(spec.taps), t=t, rad=rad, zc=zc,
+        halo=halo, ring=ring, zdim=zdim, ydim=ydim, xdim=xdim)
+
+    out = pl.pallas_call(
+        kern,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((zc, yp, xp), lambda i: (jnp.maximum(i - 1, 0), 0, 0)),
+            pl.BlockSpec((zc, yp, xp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((zc, yp, xp), lambda i: (jnp.minimum(i + 1, grid - 1), 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((zc, yp, xp), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((zp, yp, xp), x.dtype),
+        scratch_shapes=[pltpu.VMEM((t * ring, yp, xp), jnp.float32)],
+        interpret=interpret,
+    )(xpad, xpad, xpad)
+    return out[:zdim, rad:rad + ydim, rad:rad + xdim]

@@ -1,0 +1,45 @@
+"""Production mesh construction.
+
+Kept as functions (never module-level constants) so importing this module
+never touches jax device state — required for the dry-run's 512-placeholder-
+device bootstrap to stay isolated from tests and benchmarks.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def _mk(shape, axes) -> Mesh:
+    n = math.prod(shape)
+    devs = jax.devices()
+    assert len(devs) >= n, f"need {n} devices, have {len(devs)}"
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes),
+                         devices=devs[:n])
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16×16 single pod (256 chips) or 2×16×16 two-pod (512 chips) mesh.
+
+    Axes: 'pod' (cross-pod data parallel, DCN-friendly — it only ever carries
+    the once-per-step gradient all-reduce), 'data' (in-pod DP + ZeRO shards),
+    'model' (tensor/expert parallel + stencil domain decomposition).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_mesh(shape, axes) -> Mesh:
+    """Arbitrary mesh for tests/examples (axis_types pinned to Auto)."""
+    return _mk(tuple(shape), tuple(axes))
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1) -> Mesh:
+    """Smoke-test mesh over whatever devices the host actually has."""
+    n = len(jax.devices())
+    assert n_data * n_model <= n, (n_data, n_model, n)
+    return _mk((n_data, n_model), ("data", "model"))

@@ -1,0 +1,146 @@
+"""Attention: chunked (online-softmax) prefill/train path + cached decode.
+
+The chunked path is the EBISU execution discipline applied to attention: a
+query tile stays resident while K/V stream through it, with online softmax —
+one pass over memory regardless of sequence length, bounded working set
+(the "one tile at a time, stream the rest" principle of §4.1/§4.3.2).
+
+Supports GQA/MQA (kv_heads ≤ heads), causal or bidirectional masks, sliding
+windows (SWA), and an optional q/k RMS-norm (qwen3-style), all under one
+implementation so every assigned architecture shares this code path.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(qpos, kpos, *, causal: bool, window: int | None):
+    ok = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        ok &= kpos[None, :] > qpos[:, None] - window
+    return ok
+
+
+def dense_attention(q, k, v, *, causal=True, window=None, q_offset=0):
+    """Reference/small-sequence path. q:(B,S,H,hd) k,v:(B,Sk,KV,hd)."""
+    b, s, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    q5 = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q5.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s) + q_offset
+    kpos = jnp.arange(sk)
+    ok = _mask(qpos, kpos, causal=causal, window=window)
+    scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, q_chunk=512,
+                    kv_chunk=1024, q_offset=0):
+    """Online-softmax chunked attention; memory O(q_chunk · kv_chunk)."""
+    b, s, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    if s % q_chunk or sk % kv_chunk or s <= q_chunk:
+        return dense_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset)
+    nq, nk = s // q_chunk, sk // kv_chunk
+    scale = 1.0 / math.sqrt(hd)
+    q5 = q.reshape(b, nq, q_chunk, kv, g, hd).astype(jnp.float32)
+    k4 = k.reshape(b, nk, kv_chunk, kv, hd).astype(jnp.float32)
+    v4 = v.reshape(b, nk, kv_chunk, kv, hd).astype(jnp.float32)
+
+    def q_body(_, q_blk_idx):
+        q_blk, iq = q_blk_idx
+        qpos = iq * q_chunk + jnp.arange(q_chunk) + q_offset
+
+        def kv_body(carry, kv_blk_idx):
+            m, l, acc = carry
+            k_blk, v_blk, ik = kv_blk_idx
+            kpos = ik * kv_chunk + jnp.arange(kv_chunk)
+            # scores: (b, kv, g, qc, kc)
+            sc = jnp.einsum("bqkgd,bskd->bkgqs", q_blk, k_blk) * scale
+            ok = _mask(qpos, kpos, causal=causal, window=window)
+            sc = jnp.where(ok[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p, v_blk)
+            return (m_new, l_new, acc_new), ()
+
+        m0 = jnp.full((b, kv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0),
+            (k4.swapaxes(0, 1), v4.swapaxes(0, 1), jnp.arange(nk)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # (b, kv, g, qc, hd) -> (b, qc, kv, g, hd)
+        return (), out.transpose(0, 3, 1, 2, 4)
+
+    _, outs = jax.lax.scan(q_body, (), (q5.swapaxes(0, 1), jnp.arange(nq)))
+    # outs: (nq, b, qc, kv, g, hd)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, hd)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, length, *, slot_pos=None,
+                     window=None):
+    """Single-token attention over a cache.
+
+    q: (B, 1, H, hd); k/v_cache: (B, S_cache, KV, hd); length: scalar int —
+    number of valid cache entries (synchronized batch decode).
+    slot_pos: (S_cache,) absolute position of each slot for rolling (SWA)
+    caches; default slot i holds position i.
+    """
+    b, _, h, hd = q.shape
+    _, sc, kv, _ = k_cache.shape
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    q4 = q.reshape(b, kv, g, hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", q4.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(sc) if slot_pos is None else slot_pos
+    ok = (pos < length) & (pos >= 0)
+    if window is not None:
+        ok &= pos > length - 1 - window
+    scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def cache_update(k_cache, v_cache, k_new, v_new, pos, *, window=None):
+    """Insert (B, n, KV, hd) new entries at ``pos`` (rolling when windowed).
+
+    Returns (k_cache, v_cache, slot_pos_update_fn) — slot bookkeeping for
+    windowed caches is kept by the caller via ``rolling_slot``.
+    """
+    sc = k_cache.shape[1]
+    at = pos % sc if window is not None else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(
+        k_cache.dtype), at, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(
+        v_cache.dtype), at, axis=1)
+    return k_cache, v_cache
+
+
+def rolling_slot_pos(slot_pos, pos, n, cache_len):
+    """Update the absolute-position map for a rolling cache insert."""
+    at = pos % cache_len
+    return jax.lax.dynamic_update_slice_in_dim(
+        slot_pos, pos + jnp.arange(n, dtype=slot_pos.dtype), at, axis=0)

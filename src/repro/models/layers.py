@@ -1,0 +1,140 @@
+"""Core NN layers: norms, RoPE, MLPs, embeddings, chunked cross-entropy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.params import ParamDef
+
+
+def shard(x, *spec):
+    """Sharding-constraint helper; no-op outside a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError):
+        return x
+
+
+# ------------------------------------------------------------------- norms --
+def rms_norm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale + bias
+
+
+def norm_defs(d_model: int, kind: str):
+    if kind == "ln":
+        return {"scale": ParamDef((d_model,), P(), "ones"),
+                "bias": ParamDef((d_model,), P(), "zeros")}
+    return {"scale": ParamDef((d_model,), P(), "ones")}
+
+
+def apply_norm(x, p, kind: str, eps=1e-6):
+    if kind == "ln":
+        return layer_norm(x, p["scale"], p["bias"], eps)
+    return rms_norm(x, p["scale"], eps)
+
+
+# -------------------------------------------------------------------- RoPE --
+def rope_cos_sin(positions, head_dim: int, theta: float):
+    """positions: (...,) int32 -> cos/sin (..., head_dim/2) f32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, hd); cos/sin: (B, S, hd/2) — half-rotation convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    x32 = (x1.astype(jnp.float32), x2.astype(jnp.float32))
+    return jnp.concatenate(
+        [x32[0] * cos - x32[1] * sin, x32[1] * cos + x32[0] * sin],
+        axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- MLP --
+def mlp_defs(d_model: int, d_ff: int, act: str):
+    defs = {"w_up": ParamDef((d_model, d_ff), P(None, "model")),
+            "w_down": ParamDef((d_ff, d_model), P("model", None))}
+    if act in ("swiglu", "geglu"):
+        defs["w_gate"] = ParamDef((d_model, d_ff), P(None, "model"))
+    return defs
+
+
+def apply_mlp(x, p, act: str):
+    up = x @ p["w_up"]
+    if act == "swiglu":
+        up = jax.nn.silu(x @ p["w_gate"]) * up
+    elif act == "geglu":
+        up = jax.nn.gelu(x @ p["w_gate"]) * up
+    elif act == "gelu":
+        up = jax.nn.gelu(up)
+    else:
+        up = jax.nn.silu(up)
+    return up @ p["w_down"]
+
+
+# -------------------------------------------------------------- embeddings --
+def embed_defs(vocab: int, d_model: int):
+    # 0.02 std (GPT-2 convention) keeps tied-embedding logits sane at init
+    return {"table": ParamDef((vocab, d_model), P(None, "model"),
+                              "normal", scale=0.02)}
+
+
+def embed_lookup(tokens, table):
+    return jnp.take(table, tokens, axis=0)
+
+
+# --------------------------------------------------------- chunked CE loss --
+def chunked_ce_loss(hidden, table, labels, mask=None, chunk: int = 512,
+                    logit_pspec=("data", None, "model")):
+    """Cross-entropy against tied-embedding logits, scanning over sequence
+    chunks so the (B, S, V) logits tensor is never materialized whole.
+
+    hidden: (B, S, d); table: (V, d); labels: (B, S) int32; mask: (B, S).
+    """
+    b, s, d = hidden.shape
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    chunk = min(chunk, s)
+    n = s // chunk
+    rem = s - n * chunk
+
+    def one(h_c, l_c, m_c):
+        logits = jnp.einsum("bsd,vd->bsv", h_c.astype(jnp.float32),
+                            table.astype(jnp.float32))
+        logits = shard(logits, *logit_pspec)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l_c[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * m_c), jnp.sum(m_c)
+
+    def body(carry, xs):
+        h_c, l_c, m_c = xs
+        tot, cnt = one(h_c, l_c, m_c)
+        return (carry[0] + tot, carry[1] + cnt), ()
+
+    if n > 0:
+        hs = hidden[:, :n * chunk].reshape(b, n, chunk, d).swapaxes(0, 1)
+        ls = labels[:, :n * chunk].reshape(b, n, chunk).swapaxes(0, 1)
+        ms = mask[:, :n * chunk].reshape(b, n, chunk).swapaxes(0, 1)
+        (tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0), (hs, ls, ms))
+    else:
+        tot, cnt = 0.0, 0.0
+    if rem:
+        t2, c2 = one(hidden[:, n * chunk:], labels[:, n * chunk:],
+                     mask[:, n * chunk:])
+        tot, cnt = tot + t2, cnt + c2
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,109 @@
+"""Minimal pytree parameter system (no flax/optax in this container).
+
+A model's parameters are a nested dict of ``ParamDef`` leaves; the same tree
+yields (a) ShapeDtypeStructs for the dry-run, (b) NamedShardings for pjit
+in_shardings, and (c) real initialized arrays for smoke tests / examples.
+
+Sharding convention (mesh axes: optional 'pod', 'data', 'model'):
+  * weights carry only 'model' in their PartitionSpec (tensor parallel);
+    replication over 'pod'/'data' makes XLA insert the gradient all-reduce
+    over those axes automatically in the backward pass;
+  * optimizer moments additionally shard a divisible dim over 'data'
+    (ZeRO-style) — see train/optimizer.zero_pspec.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    pspec: P = P()
+    init: str = "normal"        # normal | zeros | ones
+    scale: float | None = None  # default: 1/sqrt(fan_in)
+    dtype: Any = None           # overrides the tree-level default when set
+
+    def fan_in(self) -> int:
+        return int(self.shape[-2]) if len(self.shape) >= 2 else int(self.shape[-1])
+
+
+def is_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_abstract(tree, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype or dtype),
+        tree, is_leaf=is_def)
+
+
+def tree_pspecs(tree):
+    return jax.tree.map(lambda d: d.pspec, tree, is_leaf=is_def)
+
+
+def tree_shardings(tree, mesh: Mesh):
+    return jax.tree.map(lambda d: NamedSharding(mesh, d.pspec), tree,
+                        is_leaf=is_def)
+
+
+def tree_init(tree, key, dtype=jnp.float32):
+    """Initialize real arrays. Deterministic per-leaf keys via tree paths."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_def)
+    keys = jax.random.split(key, max(1, len(leaves)))
+    out = []
+    for k, d in zip(keys, leaves):
+        dt = d.dtype or dtype
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dt))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dt))
+        else:
+            scale = d.scale if d.scale is not None else 1.0 / np.sqrt(d.fan_in())
+            out.append((jax.random.normal(k, d.shape, jnp.float32)
+                        * scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_bytes(tree, bytes_per_el: int = 4) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_def)
+    return sum(int(np.prod(d.shape)) * bytes_per_el for d in leaves)
+
+
+def tree_count(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_def)
+    return sum(int(np.prod(d.shape)) for d in leaves)
+
+
+def stacked(defn: ParamDef, n: int) -> ParamDef:
+    """Stack a per-layer ParamDef for scan-over-layers (leading dim L)."""
+    return ParamDef((n,) + tuple(defn.shape), P(*((None,) + tuple(defn.pspec))),
+                    defn.init, defn.scale, defn.dtype)
+
+
+def map_stacked(tree, n: int):
+    return jax.tree.map(lambda d: stacked(d, n), tree, is_leaf=is_def)
+
+
+def fsdp_transform(tree, axes: tuple, total: int):
+    """Re-shard every ParamDef for FSDP: the largest dim divisible by the
+    full device count is sharded over ALL mesh axes; everything else is
+    replicated (gathered on use — XLA inserts the per-layer all-gathers).
+    Activation-level TP constraints become no-ops (mesh_model hint = 1)."""
+    def one(d: ParamDef) -> ParamDef:
+        best = None
+        for i, dim in enumerate(d.shape):
+            if dim % total == 0 and dim >= total:
+                if best is None or dim > d.shape[best]:
+                    best = i
+        spec = [None] * len(d.shape)
+        if best is not None:
+            spec[best] = axes
+        return ParamDef(d.shape, P(*spec), d.init, d.scale, d.dtype)
+    return jax.tree.map(one, tree, is_leaf=is_def)

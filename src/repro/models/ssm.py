@@ -1,0 +1,219 @@
+"""Mamba2 / SSD (state-space duality) mixer — chunked scan + O(1) decode.
+
+This is the architecture family where the paper's contribution maps most
+directly (DESIGN.md §4): the SSD recurrence ``h_{s+1} = exp(dt·A)·h_s +
+dt·B x_s`` streamed over the sequence axis *is* a 1-D stencil in time, and
+the chunked SSD algorithm below is temporal blocking — each chunk of
+``chunk`` sequence steps is processed per pass with the inter-chunk state
+carried like the multi-queue carries planes:
+
+  * intra-chunk term: dense (quadratic-in-chunk) attention-like product —
+    the paper's "fused steps inside the tile";
+  * inter-chunk term: one sequential scan over chunk states — the paper's
+    streaming queue, one "sync" (scan step) per chunk instead of per token
+    (lazy streaming, §4.3.2).
+
+Decode keeps the (h, n, p) state resident across steps — device tiling ≙
+state residency (one-tile-at-a-time with the tile = the SSM state).
+
+Simplifications vs the reference CUDA implementation (recorded in DESIGN.md):
+the causal conv runs on x only (not xBC), and B/C groups are expanded to
+heads before the einsums.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import rms_norm
+from repro.models.params import ParamDef
+
+
+def ssm_defs(d_model: int, d_inner: int, n_heads: int, d_state: int,
+             n_groups: int, d_conv: int = 4):
+    return {
+        "wz": ParamDef((d_model, d_inner), P(None, "model")),
+        "wx": ParamDef((d_model, d_inner), P(None, "model")),
+        "wB": ParamDef((d_model, n_groups * d_state), P()),
+        "wC": ParamDef((d_model, n_groups * d_state), P()),
+        "wdt": ParamDef((d_model, n_heads), P()),
+        "conv_w": ParamDef((d_conv, d_inner), P(None, "model"),
+                           "normal", scale=0.5),
+        "A_log": ParamDef((n_heads,), P(), "zeros"),
+        "D": ParamDef((n_heads,), P(), "ones"),
+        "dt_bias": ParamDef((n_heads,), P(), "zeros"),
+        "norm": ParamDef((d_inner,), P(), "ones"),
+        "out_proj": ParamDef((d_inner, d_model), P("model", None)),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv over seq. x: (B,S,C); w: (K,C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out
+
+
+def _segsum(dA):
+    """dA: (..., Q) -> (..., Q, Q) log-decay matrix: sum_{j<i<=q} dA_i."""
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # (..., q_i, q_j)
+    mask = jnp.arange(q)[:, None] >= jnp.arange(q)[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D, *, chunk: int = 128):
+    """Chunked SSD. x:(b,s,h,p) dt:(b,s,h) A:(h,) B,C:(b,s,h,n) D:(h,).
+
+    Returns y:(b,s,h,p) and the final state (b,h,n,p).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = x.shape[1]
+    nc = sp // chunk
+
+    xr = x.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    dtr = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Br = B.reshape(b, nc, chunk, h, n).astype(jnp.float32)
+    Cr = C.reshape(b, nc, chunk, h, n).astype(jnp.float32)
+
+    dA = dtr * A[None, None, None, :]                    # (b,nc,q,h) ≤ 0
+    dA_h = dA.transpose(0, 1, 3, 2)                      # (b,nc,h,q)
+    cs = jnp.cumsum(dA_h, axis=-1)
+
+    # intra-chunk (the "fused steps inside the tile"):
+    L = jnp.exp(_segsum(dA_h))                           # (b,nc,h,q,k)
+    xdt = xr * dtr[..., None]                            # (b,nc,k,h,p)
+    y_intra = jnp.einsum("bcqhn,bckhn,bchqk,bckhp->bcqhp", Cr, Br, L, xdt)
+
+    # per-chunk end states: sum_k exp(cs_end - cs_k) dt_k B_k ⊗ x_k
+    decay_to_end = jnp.exp(cs[..., -1:] - cs)            # (b,nc,h,q)
+    states = jnp.einsum("bchk,bckhn,bckhp->bchnp",
+                        decay_to_end, Br, xdt)
+
+    # inter-chunk scan (the streaming queue; one step per chunk):
+    chunk_decay = jnp.exp(cs[..., -1])                   # (b,nc,h)
+
+    def scan_fn(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry                                # emit state *before*
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # (b,nc,h,n,p)
+
+    in_decay = jnp.exp(cs).transpose(0, 1, 3, 2)         # (b,nc,q,h)
+    y_inter = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp", Cr, prev_states, in_decay)
+
+    y = (y_intra + y_inter).reshape(b, sp, h, p)[:, :s]
+    y = y + x[:, :s].astype(jnp.float32) * D[None, None, :, None]
+    return y, final
+
+
+def ssd_decode_step(state, x, dt, A, B, C, D):
+    """One-token SSD update. state:(b,h,n,p) x:(b,h,p) dt:(b,h) B,C:(b,h,n)."""
+    x32, dt32 = x.astype(jnp.float32), dt.astype(jnp.float32)
+    dA = jnp.exp(dt32 * A[None, :])                      # (b,h)
+    inc = jnp.einsum("bhn,bhp->bhnp", B.astype(jnp.float32) * dt32[..., None],
+                     x32)
+    state = state * dA[..., None, None] + inc
+    y = jnp.einsum("bhn,bhnp->bhp", C.astype(jnp.float32), state)
+    return y + x32 * D[None, :, None], state
+
+
+def apply_ssm(x, p, cfg, *, chunk: int = 128):
+    """Full mamba2 mixer on (B, S, d_model) -> (B, S, d_model)."""
+    h, hd, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    z = x @ p["wz"]
+    xs = _causal_conv(x @ p["wx"], p["conv_w"])
+    xs = jax.nn.silu(xs)
+    b, s, _ = x.shape
+    if getattr(cfg, "ssm_impl", "chunked_jnp") == "boundary_stub":
+        # dry-run stand-in for a fused SSD kernel: identical input/output
+        # boundary traffic (x in, y out, all projections alive), none of the
+        # chunked scan's intermediate state round-trips (see DESIGN.md §8.9)
+        small = ((x @ p["wB"]).mean() + (x @ p["wC"]).mean()
+                 + (x @ p["wdt"]).mean()) * 1e-30
+        y = rms_norm(xs * jax.nn.silu(z) + small, p["norm"])
+        return y @ p["out_proj"]
+    B = (x @ p["wB"]).reshape(b, s, g, n)
+    C = (x @ p["wC"]).reshape(b, s, g, n)
+    hpg = h // g
+    B = jnp.repeat(B, hpg, axis=2)
+    C = jnp.repeat(C, hpg, axis=2)
+    dt = jax.nn.softplus((x @ p["wdt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, _ = ssd_chunked(xs.reshape(b, s, h, hd), dt, A, B, C,
+                       p["D"].astype(jnp.float32), chunk=chunk)
+    y = y.reshape(b, s, h * hd).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out_proj"]
+
+
+def apply_ssm_with_state(x, p, cfg, *, chunk: int = 128):
+    """Like apply_ssm but also returns (conv_tail, final_ssm_state) so a
+    prefill can hand off to O(1) decode."""
+    h, hd, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    z = x @ p["wz"]
+    xin = x @ p["wx"]
+    xs = jax.nn.silu(_causal_conv(xin, p["conv_w"]))
+    b, s, _ = x.shape
+    k = p["conv_w"].shape[0]
+    tail = xin[:, -k:] if s >= k else jnp.pad(xin, ((0, 0), (k - s, 0), (0, 0)))
+    if getattr(cfg, "ssm_impl", "chunked_jnp") == "boundary_stub":
+        small = ((x @ p["wB"]).mean() + (x @ p["wC"]).mean()
+                 + (x @ p["wdt"]).mean()) * 1e-30
+        y = rms_norm(xs * jax.nn.silu(z) + small, p["norm"])
+        state = jnp.zeros((b, h, n, hd), jnp.float32)
+        return y @ p["out_proj"], tail, state
+    B = (x @ p["wB"]).reshape(b, s, g, n)
+    C = (x @ p["wC"]).reshape(b, s, g, n)
+    hpg = h // g
+    B = jnp.repeat(B, hpg, axis=2)
+    C = jnp.repeat(C, hpg, axis=2)
+    dt = jax.nn.softplus((x @ p["wdt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, final = ssd_chunked(xs.reshape(b, s, h, hd), dt, A, B, C,
+                           p["D"].astype(jnp.float32), chunk=chunk)
+    y = y.reshape(b, s, h * hd).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out_proj"], tail, final
+
+
+def ssm_decode(x, p, cfg, conv_state, ssm_state):
+    """Single-token mixer. x: (B, 1, d). Carries (conv_state, ssm_state)."""
+    h, hd, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    b = x.shape[0]
+    z = x @ p["wz"]
+    xin = (x @ p["wx"])[:, 0]                            # (B, d_inner)
+    k = p["conv_w"].shape[0]
+    conv_state = jnp.concatenate([conv_state[:, 1:], xin[:, None]], axis=1)
+    xs = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_state, p["conv_w"]))
+    B = (x @ p["wB"])[:, 0].reshape(b, g, n)
+    C = (x @ p["wC"])[:, 0].reshape(b, g, n)
+    hpg = h // g
+    B = jnp.repeat(B, hpg, axis=1)
+    C = jnp.repeat(C, hpg, axis=1)
+    dt = jax.nn.softplus((x @ p["wdt"])[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, ssm_state = ssd_decode_step(ssm_state, xs.reshape(b, h, hd), dt, A,
+                                   B, C, p["D"].astype(jnp.float32))
+    y = y.reshape(b, 1, h * hd).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out_proj"], conv_state, ssm_state

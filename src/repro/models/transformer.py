@@ -1,0 +1,544 @@
+"""Model zoo: decoder LMs (dense/MoE/SSM/hybrid), encoders, VLM wrapper.
+
+All architectures share one blocks-as-scanned-pytrees implementation:
+per-layer parameters are stacked on a leading L dim and the layer loop is a
+``lax.scan`` (keeps HLO size flat for the 94-layer MoE on the 512-device
+dry-run).  Families:
+
+  dense    — pre-norm attention + (Swi/Ge)GLU MLP        (danube/minicpm/gemma/qwen3)
+  moe      — attention + top-k MoE FFN                   (qwen3-moe/granite-moe)
+  ssm      — mamba2 SSD mixer only                       (mamba2-130m)
+  hybrid   — mamba2 blocks + one *shared* attention+MLP
+             block applied every ``attn_every`` layers   (zamba2)
+  encoder  — bidirectional attention, LayerNorm, masked-
+             prediction head (frames stub input)         (hubert)
+  vlm      — decoder LM with patch-embedding stub prefix (internvl2)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.params import ParamDef, map_stacked
+
+
+# ---------------------------------------------------------------- attention --
+def attn_defs(cfg):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    defs = {
+        "wq": ParamDef((d, h * hd), P(None, "model")),
+        "wk": ParamDef((d, kv * hd), P(None, "model")),
+        "wv": ParamDef((d, kv * hd), P(None, "model")),
+        "wo": ParamDef((h * hd, d), P("model", None)),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), P(), "ones")
+        defs["k_norm"] = ParamDef((hd,), P(), "ones")
+    return defs
+
+
+def apply_attn(x, p, cfg, *, positions, causal=True):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, kv, hd)
+    v = (x @ p["wv"]).reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"])
+        k = L.rms_norm(k, p["k_norm"])
+    if cfg.rope_theta:
+        cos, sin = L.rope_cos_sin(positions, hd, cfg.rope_theta)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+    if cfg.attention_impl == "boundary_stub":
+        # Dry-run stand-in for kernels/flash_attention.py: identical
+        # q/k/v/o HBM boundary traffic, zero S x S intermediates.  Used to
+        # measure what the Pallas kernel saves (EXPERIMENTS.md §Perf).
+        g = h // kv
+        km = jnp.repeat(k.mean(axis=1, keepdims=True), g, axis=2)
+        vm = jnp.repeat(v.mean(axis=1, keepdims=True), g, axis=2)
+        out = q * km + vm
+    else:
+        out = attn.flash_attention(
+            q, k, v, causal=causal, window=cfg.swa_window,
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    return out.reshape(b, s, h * hd) @ p["wo"], (k, v)
+
+
+def apply_attn_decode(x, p, cfg, *, cache, layer_pos):
+    """x: (B,1,d). cache dict: k,v (B,Sc,KV,hd), slot_pos (Sc,), pos scalar."""
+    b = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, 1, h, hd)
+    k = (x @ p["wk"]).reshape(b, 1, kv, hd)
+    v = (x @ p["wv"]).reshape(b, 1, kv, hd)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"])
+        k = L.rms_norm(k, p["k_norm"])
+    if cfg.rope_theta:
+        cos, sin = L.rope_cos_sin(layer_pos[None, None], hd, cfg.rope_theta)
+        q = L.apply_rope(q, jnp.broadcast_to(cos, (b, 1, hd // 2)),
+                         jnp.broadcast_to(sin, (b, 1, hd // 2)))
+        k = L.apply_rope(k, jnp.broadcast_to(cos, (b, 1, hd // 2)),
+                         jnp.broadcast_to(sin, (b, 1, hd // 2)))
+    kc, vc = attn.cache_update(cache["k"], cache["v"], k, v, layer_pos,
+                               window=cfg.swa_window)
+    slot_pos = attn.rolling_slot_pos(cache["slot_pos"], layer_pos, 1,
+                                     kc.shape[1])
+    out = attn.decode_attention(q, kc, vc, layer_pos + 1,
+                                slot_pos=slot_pos, window=cfg.swa_window)
+    y = out.reshape(b, 1, h * hd) @ p["wo"]
+    return y, {"k": kc, "v": vc, "slot_pos": slot_pos}
+
+
+def attn_cache_defs(cfg, batch: int, cache_len: int):
+    kv, hd = cfg.kv_heads, cfg.head_dim
+    sc = min(cache_len, cfg.swa_window) if cfg.swa_window else cache_len
+    kv_pspec = _cache_pspec(cfg, batch, sc)
+    return {
+        "k": ParamDef((batch, sc, kv, hd), kv_pspec, "zeros"),
+        "v": ParamDef((batch, sc, kv, hd), kv_pspec, "zeros"),
+        "slot_pos": ParamDef((sc,), P(), "zeros", dtype=jnp.int32),
+    }
+
+
+def _cache_pspec(cfg, batch: int, seq: int) -> P:
+    """KV-cache sharding over BOTH mesh axes (the cache is the dominant
+    decode-state tensor; leaving 'model' unused was caught by the dry-run's
+    memory analysis — 21.5 GB/device for qwen3-14b decode_32k):
+
+      batch dim  -> DP axes when divisible, else the cache seq dim -> 'data'
+                    (sequence-parallel decode; long_500k's B=1 case);
+      kv-heads   -> 'model' when divisible (head-parallel attention), else
+      head_dim   -> 'model' (always 16-divisible in the assigned pool;
+                    scores need a psum over 'model' — see DESIGN.md §5).
+    """
+    mm = max(1, cfg.mesh_model)
+    if cfg.kv_heads % mm == 0 and cfg.kv_heads >= mm:
+        model_dims = (None, "model", None)
+    elif cfg.head_dim % mm == 0:
+        model_dims = (None, None, "model")
+    else:
+        model_dims = (None, None, None)
+    if batch % max(1, cfg.mesh_dp) == 0 and batch >= cfg.mesh_dp > 1:
+        return P(cfg.dp_axes, *model_dims)
+    if cfg.mesh_dp > 1 and seq % cfg.mesh_dp == 0:
+        return P(None, "data", *model_dims[1:])
+    return P(None, *model_dims)
+
+
+# -------------------------------------------------------------------- blocks --
+def block_defs(cfg):
+    """Per-layer parameter defs for one block of cfg.family."""
+    fam = cfg.family
+    if fam in ("dense", "encoder", "vlm"):
+        return {
+            "ln1": L.norm_defs(cfg.d_model, cfg.norm),
+            "attn": attn_defs(cfg),
+            "ln2": L.norm_defs(cfg.d_model, cfg.norm),
+            "mlp": L.mlp_defs(cfg.d_model, cfg.d_ff, cfg.act),
+        }
+    if fam == "moe":
+        mdefs, _ = moe_mod.moe_defs(cfg.d_model, cfg.d_ff, cfg.n_experts,
+                                    act=cfg.act)
+        return {
+            "ln1": L.norm_defs(cfg.d_model, cfg.norm),
+            "attn": attn_defs(cfg),
+            "ln2": L.norm_defs(cfg.d_model, cfg.norm),
+            "moe": mdefs,
+        }
+    if fam in ("ssm", "hybrid"):
+        return {
+            "ln1": L.norm_defs(cfg.d_model, cfg.norm),
+            "ssm": ssm_mod.ssm_defs(cfg.d_model, cfg.ssm_inner,
+                                    cfg.ssm_heads, cfg.ssm_state,
+                                    cfg.ssm_groups),
+        }
+    raise ValueError(fam)
+
+
+def shared_attn_defs(cfg):
+    """zamba2: one shared attention+MLP block reused every attn_every layers."""
+    return {
+        "ln1": L.norm_defs(cfg.d_model, cfg.norm),
+        "attn": attn_defs(cfg),
+        "ln2": L.norm_defs(cfg.d_model, cfg.norm),
+        "mlp": L.mlp_defs(cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def _dp(cfg):
+    return cfg.dp_axes
+
+
+def apply_block(x, bp, cfg, *, positions, aux):
+    fam = cfg.family
+    x = L.shard(x, _dp(cfg), None, None)
+    if fam in ("dense", "encoder", "vlm", "moe"):
+        h, _ = apply_attn(L.apply_norm(x, bp["ln1"], cfg.norm), bp["attn"],
+                          cfg, positions=positions,
+                          causal=fam != "encoder")
+        x = x + h
+        if fam == "moe":
+            y, aux_l = moe_mod.apply_moe_ep(
+                L.apply_norm(x, bp["ln2"], cfg.norm), bp["moe"],
+                n_experts=cfg.n_experts, n_padded=cfg.n_experts_padded,
+                top_k=cfg.top_k, act=cfg.act,
+                capacity_factor=cfg.moe_capacity, dp_axes=_dp(cfg))
+            aux = aux + aux_l
+        else:
+            y = L.apply_mlp(L.apply_norm(x, bp["ln2"], cfg.norm), bp["mlp"],
+                            cfg.act)
+        return x + y, aux
+    # ssm / hybrid mamba block
+    y = ssm_mod.apply_ssm(L.apply_norm(x, bp["ln1"], cfg.norm), bp["ssm"],
+                          cfg, chunk=cfg.ssm_chunk)
+    return x + y, aux
+
+
+# ------------------------------------------------------------- full models --
+def param_defs(cfg):
+    defs: dict[str, Any] = {"blocks": map_stacked(block_defs(cfg),
+                                                  cfg.n_layers)}
+    if cfg.family == "encoder":
+        defs["embed_in"] = {}  # frames arrive pre-embedded (modality stub)
+        defs["mask_embed"] = ParamDef((cfg.d_model,), P(), "normal", 1.0)
+        defs["head"] = ParamDef((cfg.vocab, cfg.d_model), P(None, "model"))
+    else:
+        defs["embed"] = L.embed_defs(cfg.vocab, cfg.d_model)
+        if not cfg.tie_embeddings:
+            defs["head"] = ParamDef((cfg.vocab, cfg.d_model),
+                                    P(None, "model"))
+    if cfg.family == "hybrid":
+        defs["shared_attn"] = shared_attn_defs(cfg)
+    if cfg.family == "vlm":
+        defs["patch_proj"] = ParamDef((cfg.vlm_patch_dim, cfg.d_model),
+                                      P(None, "model"))
+    defs["ln_f"] = L.norm_defs(cfg.d_model, cfg.norm)
+    if cfg.sharding == "fsdp":
+        from repro.models.params import fsdp_transform
+        total = max(1, cfg.mesh_dp) * max(1, cfg.mesh_model)
+        defs = fsdp_transform(defs, cfg.dp_axes, total)
+    return defs
+
+
+def _scan_blocks(x, params, cfg, *, positions, collect_cache=False):
+    """lax.scan over stacked blocks; hybrid applies the shared block inside."""
+    shared = params.get("shared_attn")
+    remat = cfg.remat
+
+    def body(carry, bp_and_idx):
+        x, aux = carry
+        bp, idx = bp_and_idx
+
+        def inner(x, aux, bp):
+            if cfg.family == "hybrid" and shared is not None:
+                def with_shared(x):
+                    h, _ = apply_attn(
+                        L.apply_norm(x, shared["ln1"], cfg.norm),
+                        shared["attn"], cfg, positions=positions)
+                    x = x + h
+                    return x + L.apply_mlp(
+                        L.apply_norm(x, shared["ln2"], cfg.norm),
+                        shared["mlp"], cfg.act)
+                x = jax.lax.cond(idx % cfg.attn_every == 0, with_shared,
+                                 lambda x: x, x)
+            return apply_block(x, bp, cfg, positions=positions, aux=aux)
+
+        if remat:
+            inner = jax.checkpoint(inner,
+                                   policy=jax.checkpoint_policies.nothing_saveable)
+        x, aux = inner(x, aux, bp)
+        return (x, aux), ()
+
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.float32(0.0)),
+        (params["blocks"], jnp.arange(cfg.n_layers)))
+    return x, aux
+
+
+def forward_hidden(cfg, params, batch):
+    """Embed + blocks + final norm -> hidden (B, S, d), aux loss."""
+    if cfg.family == "encoder":
+        x = batch["frames"].astype(cfg.activ_dtype)
+        if "mask" in batch:
+            m = batch["mask"][..., None]
+            x = jnp.where(m, params["mask_embed"].astype(x.dtype), x)
+    else:
+        x = L.embed_lookup(batch["tokens"], params["embed"]["table"])
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        if cfg.family == "vlm":
+            patches = batch["patches"].astype(x.dtype) @ params["patch_proj"]
+            x = jnp.concatenate([patches, x], axis=1)
+    x = L.shard(x.astype(cfg.activ_dtype), _dp(cfg), None, None)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]),
+                                 (x.shape[0], x.shape[1]))
+    x, aux = _scan_blocks(x, params, cfg, positions=positions)
+    x = L.apply_norm(x, params["ln_f"], cfg.norm)
+    if cfg.family == "vlm":
+        x = x[:, batch["patches"].shape[1]:]
+    return x, aux
+
+
+def train_loss(cfg, params, batch):
+    hidden, aux = forward_hidden(cfg, params, batch)
+    if cfg.family == "encoder":
+        table = params["head"]
+        mask = batch["mask"].astype(jnp.float32)
+    else:
+        table = (params["embed"]["table"] if cfg.tie_embeddings
+                 else params["head"])
+        mask = batch.get("loss_mask")
+    loss = L.chunked_ce_loss(
+        hidden, table, batch["labels"], mask, chunk=cfg.loss_chunk,
+        logit_pspec=(_dp(cfg), None,
+                     "model" if cfg.sharding == "tp" else None))
+    return loss + cfg.moe_aux_weight * aux
+
+
+# ----------------------------------------------------------------- serving --
+def logits_fn(cfg, params, hidden):
+    table = (params["head"] if (cfg.family == "encoder"
+                                or not cfg.tie_embeddings)
+             else params["embed"]["table"])
+    return jnp.einsum("b s d, v d -> b s v", hidden.astype(jnp.float32),
+                      table.astype(jnp.float32))
+
+
+def cache_defs(cfg, batch: int, cache_len: int):
+    """Stacked (leading L dim) decode caches per family."""
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return {"attn": map_stacked(attn_cache_defs(cfg, batch, cache_len),
+                                    cfg.n_layers)}
+    if fam == "ssm":
+        return {"ssm": map_stacked(_ssm_cache_defs(cfg, batch), cfg.n_layers)}
+    if fam == "hybrid":
+        n_inv = (cfg.n_layers + cfg.attn_every - 1) // cfg.attn_every
+        return {
+            "ssm": map_stacked(_ssm_cache_defs(cfg, batch), cfg.n_layers),
+            "shared_attn": map_stacked(
+                attn_cache_defs(cfg, batch, cache_len), n_inv),
+        }
+    raise ValueError(f"{fam} has no decode cache (encoder-only)")
+
+
+def _ssm_cache_defs(cfg, batch: int):
+    b_ax = (cfg.dp_axes if (cfg.mesh_dp > 1 and batch % cfg.mesh_dp == 0
+                            and batch >= cfg.mesh_dp) else None)
+    return {
+        "conv": ParamDef((batch, 4, cfg.ssm_inner), P(b_ax, None, "model"),
+                         "zeros"),
+        "state": ParamDef((batch, cfg.ssm_heads, cfg.ssm_state,
+                           cfg.ssm_head_dim), P(b_ax, None, None, None),
+                          "zeros", dtype=jnp.float32),
+    }
+
+
+def _shared_attn_decode(x, params, cfg, shared_cache, inv_idx, pos):
+    """Apply the zamba2 shared block at dynamic invocation index inv_idx."""
+    sp = params["shared_attn"]
+    sl = jax.tree.map(lambda c: jax.lax.dynamic_index_in_dim(
+        c, inv_idx, axis=0, keepdims=False), shared_cache)
+    h, new_sl = apply_attn_decode(L.apply_norm(x, sp["ln1"], cfg.norm),
+                                  sp["attn"], cfg, cache=sl, layer_pos=pos)
+    x = x + h
+    x = x + L.apply_mlp(L.apply_norm(x, sp["ln2"], cfg.norm), sp["mlp"],
+                        cfg.act)
+    shared_cache = jax.tree.map(
+        lambda c, n: jax.lax.dynamic_update_index_in_dim(c, n.astype(c.dtype),
+                                                         inv_idx, axis=0),
+        shared_cache, new_sl)
+    return x, shared_cache
+
+
+def decode_step(cfg, params, cache, tokens, pos):
+    """One decode step. tokens: (B, 1) int32; pos: scalar int32 (synchronized
+    batch).  Returns (logits (B, 1, V), new cache)."""
+    fam = cfg.family
+    x = L.embed_lookup(tokens, params["embed"]["table"])
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = x.astype(cfg.activ_dtype)
+
+    if fam in ("dense", "moe", "vlm"):
+        def body(carry, bp_cache):
+            x, aux = carry
+            bp, sl = bp_cache
+            h, new_sl = apply_attn_decode(
+                L.apply_norm(x, bp["ln1"], cfg.norm), bp["attn"], cfg,
+                cache=sl, layer_pos=pos)
+            x = x + h
+            if fam == "moe":
+                y, aux_l = moe_mod.apply_moe_ep(
+                    L.apply_norm(x, bp["ln2"], cfg.norm), bp["moe"],
+                    n_experts=cfg.n_experts, n_padded=cfg.n_experts_padded,
+                    top_k=cfg.top_k, act=cfg.act,
+                    capacity_factor=cfg.moe_capacity, dp_axes=_dp(cfg))
+                aux += aux_l
+            else:
+                y = L.apply_mlp(L.apply_norm(x, bp["ln2"], cfg.norm),
+                                bp["mlp"], cfg.act)
+            return (x + y, aux), jax.tree.map(
+                lambda a, b: b.astype(a.dtype), sl, new_sl)
+
+        (x, _), new_attn = jax.lax.scan(
+            body, (x, jnp.float32(0)), (params["blocks"], cache["attn"]))
+        new_cache = {"attn": new_attn}
+
+    elif fam in ("ssm", "hybrid"):
+        shared_cache = cache.get("shared_attn")
+
+        def body(carry, bp_cache_idx):
+            x, shared_cache = carry
+            bp, sl, idx = bp_cache_idx
+            if fam == "hybrid":
+                def with_shared(x, shared_cache):
+                    return _shared_attn_decode(x, params, cfg, shared_cache,
+                                               idx // cfg.attn_every, pos)
+                x, shared_cache = jax.lax.cond(
+                    idx % cfg.attn_every == 0, with_shared,
+                    lambda x, c: (x, c), x, shared_cache)
+            y, conv, state = ssm_mod.ssm_decode(
+                L.apply_norm(x, bp["ln1"], cfg.norm), bp["ssm"], cfg,
+                sl["conv"], sl["state"])
+            new_sl = {"conv": conv.astype(sl["conv"].dtype),
+                      "state": state.astype(sl["state"].dtype)}
+            return (x + y, shared_cache), new_sl
+
+        (x, shared_cache), new_ssm = jax.lax.scan(
+            body, (x, shared_cache),
+            (params["blocks"], cache["ssm"], jnp.arange(cfg.n_layers)))
+        new_cache = {"ssm": new_ssm}
+        if fam == "hybrid":
+            new_cache["shared_attn"] = shared_cache
+    else:
+        raise ValueError(fam)
+
+    x = L.apply_norm(x, params["ln_f"], cfg.norm)
+    return logits_fn(cfg, params, x), new_cache
+
+
+def prefill(cfg, params, batch, cache_len: int):
+    """Process a full prompt, returning (last-token logits, decode cache)."""
+    fam = cfg.family
+    if fam == "encoder":
+        hidden, _ = forward_hidden(cfg, params, batch)
+        return logits_fn(cfg, params, hidden[:, -1:]), {}
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = L.embed_lookup(tokens, params["embed"]["table"])
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if fam == "vlm":
+        patches = batch["patches"].astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([patches, x], axis=1)
+        s = x.shape[1]
+    x = L.shard(x.astype(cfg.activ_dtype), _dp(cfg), None, None)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    if fam in ("dense", "moe", "vlm"):
+        def body(carry, bp):
+            x, aux = carry
+            h, (k, v) = apply_attn(L.apply_norm(x, bp["ln1"], cfg.norm),
+                                   bp["attn"], cfg, positions=positions)
+            x = x + h
+            if fam == "moe":
+                y, aux_l = moe_mod.apply_moe_ep(
+                    L.apply_norm(x, bp["ln2"], cfg.norm), bp["moe"],
+                    n_experts=cfg.n_experts, n_padded=cfg.n_experts_padded,
+                    top_k=cfg.top_k, act=cfg.act,
+                    capacity_factor=cfg.moe_capacity, dp_axes=_dp(cfg))
+                aux += aux_l
+            else:
+                y = L.apply_mlp(L.apply_norm(x, bp["ln2"], cfg.norm),
+                                bp["mlp"], cfg.act)
+            return (x + y, aux), _to_cache(cfg, k, v, s, cache_len)
+
+        (x, _), attn_cache = jax.lax.scan(body, (x, jnp.float32(0)),
+                                          params["blocks"])
+        cache = {"attn": attn_cache}
+
+    elif fam in ("ssm", "hybrid"):
+        shared_cache = None
+        if fam == "hybrid":
+            n_inv = (cfg.n_layers + cfg.attn_every - 1) // cfg.attn_every
+            shared_defs = map_stacked(
+                attn_cache_defs(cfg, b, cache_len), n_inv)
+            shared_cache = jax.tree.map(
+                lambda d: jnp.zeros(d.shape, d.dtype or cfg.activ_dtype),
+                shared_defs, is_leaf=lambda q: isinstance(q, ParamDef))
+
+        def body(carry, bp_idx):
+            x, shared_cache = carry
+            bp, idx = bp_idx
+            if fam == "hybrid":
+                def with_shared(x, shared_cache):
+                    sp = params["shared_attn"]
+                    h, (k, v) = apply_attn(
+                        L.apply_norm(x, sp["ln1"], cfg.norm), sp["attn"],
+                        cfg, positions=positions)
+                    x = x + h
+                    x = x + L.apply_mlp(L.apply_norm(x, sp["ln2"], cfg.norm),
+                                        sp["mlp"], cfg.act)
+                    new_sl = _to_cache(cfg, k, v, s, cache_len)
+                    j = idx // cfg.attn_every
+                    shared_cache = jax.tree.map(
+                        lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                            c, n.astype(c.dtype), j, axis=0),
+                        shared_cache, new_sl)
+                    return x, shared_cache
+                x, shared_cache = jax.lax.cond(
+                    idx % cfg.attn_every == 0, with_shared,
+                    lambda x, c: (x, c), x, shared_cache)
+            y, conv, state = ssm_mod.apply_ssm_with_state(
+                L.apply_norm(x, bp["ln1"], cfg.norm), bp["ssm"], cfg,
+                chunk=cfg.ssm_chunk)
+            return (x + y, shared_cache), {
+                "conv": conv.astype(cfg.activ_dtype),
+                "state": state.astype(jnp.float32)}
+
+        (x, shared_cache), ssm_cache = jax.lax.scan(
+            body, (x, shared_cache if fam == "hybrid" else None),
+            (params["blocks"], jnp.arange(cfg.n_layers)))
+        cache = {"ssm": ssm_cache}
+        if fam == "hybrid":
+            cache["shared_attn"] = shared_cache
+    else:
+        raise ValueError(fam)
+
+    x = L.apply_norm(x, params["ln_f"], cfg.norm)
+    return logits_fn(cfg, params, x[:, -1:]), cache
+
+
+def _to_cache(cfg, k, v, s: int, cache_len: int):
+    """Pack prefill (B,S,KV,hd) k/v into a (B,Sc,KV,hd) cache + slot map."""
+    w = cfg.swa_window
+    sc = min(cache_len, w) if w else cache_len
+    b, _, kv, hd = k.shape
+    if w and s > sc:                      # rolling window: keep last sc
+        keep_pos = jnp.arange(s - sc, s)
+        slots = keep_pos % sc
+        kc = jnp.zeros((b, sc, kv, hd), k.dtype).at[:, slots].set(
+            k[:, s - sc:])
+        vc = jnp.zeros((b, sc, kv, hd), v.dtype).at[:, slots].set(
+            v[:, s - sc:])
+        slot_pos = jnp.zeros((sc,), jnp.int32).at[slots].set(keep_pos)
+    else:
+        kc = jnp.zeros((b, sc, kv, hd), k.dtype).at[:, :s].set(k)
+        vc = jnp.zeros((b, sc, kv, hd), v.dtype).at[:, :s].set(v)
+        slot_pos = jnp.concatenate(
+            [jnp.arange(s, dtype=jnp.int32),
+             jnp.full((sc - s,), -1, jnp.int32)]) if sc > s else \
+            jnp.arange(sc, dtype=jnp.int32)
+    return {"k": kc, "v": vc, "slot_pos": slot_pos}

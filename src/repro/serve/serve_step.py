@@ -1,0 +1,48 @@
+"""Serving entry points: prefill + decode step builders.
+
+``make_prefill``/``make_decode_step`` close over (cfg, cache_len); the
+launcher jits them with explicit in/out shardings from the config's
+ParamDef/cache trees.  decode carries a scalar ``pos`` (synchronized batched
+decode — continuous batching would thread per-row positions; noted in
+DESIGN.md as a serving extension)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+
+
+def make_prefill(cfg, cache_len: int):
+    def prefill_step(params, batch):
+        logits, cache = transformer.prefill(cfg, params, batch, cache_len)
+        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_token, cache
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    def decode_one(params, cache, tokens, pos):
+        logits, cache = transformer.decode_step(cfg, params, cache, tokens,
+                                                pos)
+        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_token, cache
+    return decode_one
+
+
+def greedy_generate(cfg, params, prompt, max_new: int, cache_len: int):
+    """Reference loop for examples/tests: prefill + n greedy decode steps."""
+    prefill_step = make_prefill(cfg, cache_len)
+    decode_one = make_decode_step(cfg)
+    batch = prompt if isinstance(prompt, dict) else {"tokens": prompt}
+    tok, cache = prefill_step(params, batch)
+    s0 = batch["tokens"].shape[1] if "tokens" in batch else 0
+    if cfg.family == "vlm":
+        s0 += cfg.vlm_patches
+    toks = [tok]
+    pos = s0
+    for _ in range(max_new - 1):
+        tok, cache = decode_one(params, cache, tok[:, None], jnp.int32(pos))
+        toks.append(tok)
+        pos += 1
+    return jnp.stack(toks, axis=1)

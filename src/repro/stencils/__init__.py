@@ -1,0 +1,1 @@
+from repro.core.stencil_spec import TABLE2, TABLE3_DEPTHS, StencilSpec, get, names  # noqa: F401

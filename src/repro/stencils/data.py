@@ -1,0 +1,20 @@
+"""Domain initialization for the stencil suite (STENCILGEN-style test data)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.stencil_spec import StencilSpec
+
+
+def init_domain(spec: StencilSpec, shape=None, dtype=jnp.float32,
+                seed: int = 0) -> jnp.ndarray:
+    """Random-in-[0,1) domain, like the STENCILGEN generator the paper uses."""
+    shape = tuple(shape or spec.domain)
+    key = jax.random.PRNGKey(seed)
+    return jax.random.uniform(key, shape, dtype=jnp.float32).astype(dtype)
+
+
+def reduced_domain(spec: StencilSpec, scale: int = 64):
+    """A CPU-sized domain with the same aspect ratio as the paper's (Table 2)."""
+    return tuple(max(2 * spec.radius + 2, d // scale) for d in spec.domain)

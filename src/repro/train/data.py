@@ -1,0 +1,74 @@
+"""Synthetic deterministic data pipeline.
+
+Every batch is a pure function of (seed, step, shard) — the straggler /
+fault-tolerance property: a restarted or replaced host regenerates exactly
+its shard of any step with no coordination (DESIGN.md §5).  Host-side
+prefetch keeps ``prefetch`` batches in flight.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def batch_for_step(cfg, shape_name: str, step: int, seed: int = 0,
+                   reduced_shapes=None):
+    """Deterministic synthetic batch matching cfg.input_specs(shape_name)."""
+    specs = (cfg.input_specs(shape_name) if reduced_shapes is None
+             else reduced_shapes)
+    rng = np.random.RandomState((seed * 1_000_003 + step) % (2**31 - 1))
+    out = {}
+    for k, sds in specs.items():
+        if k in ("tokens", "labels"):
+            # learnable structure: noisy arithmetic sequences (next = cur+1),
+            # so example trainers measurably reduce loss on synthetic data
+            b, s = sds.shape
+            offs = rng.randint(0, cfg.vocab, size=(b, 1))
+            seqs = (offs + np.arange(s)[None, :]) % cfg.vocab
+            noise = rng.rand(b, s) < 0.05
+            seqs = np.where(noise, rng.randint(0, cfg.vocab, size=(b, s)),
+                            seqs)
+            out[k] = jnp.asarray(seqs, jnp.int32)
+        elif k == "mask":
+            out[k] = jnp.asarray(rng.rand(*sds.shape) < 0.15)
+        else:
+            out[k] = jnp.asarray(rng.randn(*sds.shape), sds.dtype)
+    if "tokens" in out and "labels" in out:
+        out["labels"] = out["tokens"]          # LM: next-token via shift
+    return out
+
+
+class Prefetcher:
+    """Background-thread batch producer (host-side prefetch ≙ the paper's
+    asynchronous copy: overlap data production with device compute)."""
+
+    def __init__(self, cfg, shape_name: str, start_step: int = 0,
+                 seed: int = 0, prefetch: int = 2, reduced_shapes=None):
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+
+        def worker():
+            step = start_step
+            while not self._stop.is_set():
+                b = batch_for_step(cfg, shape_name, step, seed,
+                                   reduced_shapes)
+                while not self._stop.is_set():
+                    try:
+                        self._q.put((step, b), timeout=0.2)
+                        break
+                    except queue.Full:
+                        continue
+                step += 1
+
+        self._t = threading.Thread(target=worker, daemon=True)
+        self._t.start()
+
+    def next(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()

@@ -1,0 +1,110 @@
+"""AdamW + LR schedules (cosine, and minicpm's WSD) with ZeRO-sharded moments.
+
+No optax in this container — the optimizer is ~100 lines of pytree math.
+Moments are stored f32 regardless of param dtype, and their PartitionSpecs
+extend the param specs with a 'data'-axis shard on the first divisible dim
+(ZeRO-style: optimizer state is *fully* sharded over data×model, params stay
+replicated over data so the forward pass needs no gathers; XLA turns the
+grad-into-moment update into a reduce-scatter + the param update into an
+all-gather automatically)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.params import ParamDef, is_def
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"      # cosine | wsd | constant
+    stable_frac: float = 0.8      # WSD: fraction of steps at peak LR
+
+
+def schedule_lr(cfg: OptConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup))
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    frac = jnp.clip((step - cfg.warmup)
+                    / max(1, cfg.total_steps - cfg.warmup), 0.0, 1.0)
+    if cfg.schedule == "wsd":
+        # warmup -> stable plateau -> 1-sqrt decay (minicpm, arXiv:2404.06395)
+        decay_frac = jnp.clip((frac - cfg.stable_frac)
+                              / max(1e-6, 1 - cfg.stable_frac), 0.0, 1.0)
+        return cfg.lr * warm * (1.0 - (1 - 0.1) * jnp.sqrt(decay_frac))
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def zero_pspec(d: ParamDef, data_axis: str = "data",
+               data_size: int = 16) -> P:
+    """Extend a param PartitionSpec with a 'data' shard on the first dim that
+    is unsharded and divisible by the data-axis size (ZeRO-1)."""
+    spec = list(d.pspec) + [None] * (len(d.shape) - len(d.pspec))
+    flat = [a for s in spec if s for a in (s if isinstance(s, tuple)
+                                           else (s,))]
+    if data_axis in flat:              # FSDP params: already data-sharded
+        return P(*spec)
+    for i, (dim, cur) in enumerate(zip(d.shape, spec)):
+        if cur is None and dim % data_size == 0 and dim >= data_size:
+            spec[i] = data_axis
+            break
+    return P(*spec)
+
+
+def opt_state_defs(param_tree, data_size: int = 16):
+    """ParamDef tree for (m, v) moments, f32, ZeRO-sharded."""
+    def mom(d: ParamDef) -> ParamDef:
+        return ParamDef(d.shape, zero_pspec(d, data_size=data_size), "zeros",
+                        dtype=jnp.float32)
+    return {
+        "m": jax.tree.map(mom, param_tree, is_leaf=is_def),
+        "v": jax.tree.map(mom, param_tree, is_leaf=is_def),
+        "count": ParamDef((), P(), "zeros", dtype=jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: OptConfig, params, grads, state):
+    step = state["count"]
+    lr = schedule_lr(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    b1, b2 = cfg.betas
+    t = (step + 1).astype(jnp.float32)
+    corr = jnp.sqrt(1 - b2 ** t) / (1 - b1 ** t)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * g32 * g32
+        delta = corr * m_new / (jnp.sqrt(v_new) + cfg.eps)
+        p_new = p.astype(jnp.float32) * (1 - lr * cfg.weight_decay) \
+            - lr * delta
+        return p_new.astype(p.dtype), m_new, v_new
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "count": step + 1}, \
+        {"lr": lr, "grad_norm": gnorm}

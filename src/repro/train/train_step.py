@@ -1,0 +1,70 @@
+"""train_step: microbatched (grad-accumulation) loss/grad/update.
+
+The microbatch loop is a ``lax.scan`` — gradients accumulate in f32 across
+``cfg.microbatches`` slices of the global batch, and the cross-'data' (and
+cross-'pod') gradient all-reduce happens once per *step*, not per microbatch:
+the EBISU discipline (amortize synchronization over fused work) applied to
+data parallelism.  XLA fuses the reduce into the optimizer update (ZeRO
+moments are 'data'-sharded ⇒ reduce-scatter + all-gather)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.train import optimizer as opt
+
+
+def shift_labels(batch):
+    """Next-token targets from tokens when labels are the same sequence."""
+    if "tokens" in batch and "labels" in batch:
+        lab = batch["labels"]
+        mask = jnp.concatenate([jnp.ones_like(lab[:, :-1]),
+                                jnp.zeros_like(lab[:, -1:])], axis=1)
+        batch = dict(batch)
+        batch["labels"] = jnp.concatenate(
+            [lab[:, 1:], lab[:, -1:]], axis=1)
+        batch["loss_mask"] = mask.astype(jnp.float32)
+    return batch
+
+
+def loss_fn(cfg, params, batch):
+    return transformer.train_loss(cfg, params, shift_labels(batch))
+
+
+def make_train_step(cfg, ocfg: opt.OptConfig):
+    """Returns train_step(params, opt_state, batch) -> (params', state', metrics)."""
+    n_micro = max(1, cfg.microbatches)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(
+                functools.partial(loss_fn, cfg))(params, batch)
+        else:
+            def slice_micro(x, i):
+                b = x.shape[0] // n_micro
+                return jax.lax.dynamic_slice_in_dim(x, i * b, b, axis=0)
+
+            def body(carry, i):
+                acc, tot = carry
+                mb = jax.tree.map(lambda x: slice_micro(x, i), batch)
+                l, g = jax.value_and_grad(
+                    functools.partial(loss_fn, cfg))(params, mb)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return (acc, tot + l), ()
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(body, (zeros, 0.0),
+                                           jnp.arange(n_micro))
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            loss = lsum / n_micro
+        params, opt_state, stats = opt.adamw_update(ocfg, params, grads,
+                                                    opt_state)
+        metrics = {"loss": loss, **stats}
+        return params, opt_state, metrics
+
+    return train_step

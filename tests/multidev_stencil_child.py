@@ -1,0 +1,60 @@
+"""Child process for multi-device distributed-stencil tests.
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=8 (set by the
+parent test); asserts distributed == single-device reference, for 1-D and
+2-D domain decompositions, deep-halo blocking on/off.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.distributed import make_distributed_stencil
+from repro.core.stencil_spec import get
+from repro.kernels.ref import reference_unrolled
+from repro.stencils.data import init_domain
+
+
+def check(name, spec, shape, dim_to_axis, mesh_shape, axes, t_total, t_block):
+    mesh = jax.make_mesh(mesh_shape, axes)
+    fn, pspec = make_distributed_stencil(spec, mesh, dim_to_axis, shape,
+                                         t_total, t_block)
+    x = init_domain(spec, shape)
+    xs = jax.device_put(x, NamedSharding(mesh, pspec))
+    got = fn(xs)
+    want = reference_unrolled(x, spec, t_total)
+    err = float(jnp.abs(got - want).max())
+    assert err < 1e-4, f"{name}: maxerr {err}"
+    print(f"{name}: OK maxerr={err:.2e}")
+
+
+def main():
+    assert jax.device_count() == 8, jax.device_count()
+
+    # 1-D decomposition of a 2-D stencil, deep halo (t_block=3)
+    check("2d5pt-1dshard-deep", get("j2d5pt"), (64, 48), {0: "x"},
+          (8,), ("x",), 6, 3)
+    # 2-D decomposition of a 2-D box stencil (corners via two-hop), deep halo
+    check("2d9pt-gol-2dshard", get("j2d9pt-gol"), (32, 64), {0: "x", 1: "y"},
+          (4, 2), ("x", "y"), 4, 2)
+    # radius-2 star, 2-D decomposition
+    check("2d9pt-2dshard", get("j2d9pt"), (48, 32), {0: "x", 1: "y"},
+          (2, 4), ("x", "y"), 4, 2)
+    # 3-D stencil, 2-D decomposition over z and y
+    check("3d7pt-2dshard", get("j3d7pt"), (32, 16, 20), {0: "z", 1: "y"},
+          (4, 2), ("z", "y"), 4, 2)
+    # box 3-D (27pt: corners in 3 dims), shallow blocks
+    check("3d27pt-2dshard", get("j3d27pt"), (16, 16, 12), {0: "z", 1: "y"},
+          (2, 4), ("z", "y"), 2, 1)
+    # t_block == t_total (single exchange)
+    check("poisson-single-exchange", get("poisson"), (24, 16, 12), {0: "z"},
+          (8,), ("z",), 3, 3)
+    print("ALL-OK")
+
+
+if __name__ == "__main__":
+    main()

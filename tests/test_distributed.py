@@ -1,0 +1,38 @@
+"""Multi-device integration tests (run in a child process so the main test
+process keeps the default 1-device view, per the dry-run isolation rule)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_child(script, n_dev=8, timeout=900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, os.path.join(ROOT, "tests", script)],
+                       env=env, capture_output=True, text=True, timeout=timeout)
+    assert r.returncode == 0, f"child failed:\n{r.stdout}\n{r.stderr}"
+    assert "ALL-OK" in r.stdout
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_distributed_stencil_matches_reference():
+    out = _run_child("multidev_stencil_child.py")
+    assert out.count("OK maxerr") == 6
+
+
+@pytest.mark.slow
+def test_moe_ep_matches_pjit():
+    out = _run_child("multidev_moe_child.py")
+    assert "EP-vs-pjit maxerr" in out
+
+
+@pytest.mark.slow
+def test_compressed_gradient_allreduce():
+    out = _run_child("multidev_compress_child.py")
+    assert "compressed-DP-SGD final loss" in out

@@ -1,0 +1,121 @@
+"""Hypothesis property tests for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.multiqueue import MultiQueueLayout
+from repro.core.stencil_spec import get, star_taps, StencilSpec
+from repro.kernels import ops, ref
+
+jax.config.update("jax_enable_x64", False)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ------------------------------------------------------------ multi-queue ---
+@given(depth=st.integers(1, 12), radius=st.integers(1, 4))
+@settings(**SETTINGS)
+def test_multiqueue_invariants(depth, radius):
+    mq = MultiQueueLayout.make(depth, radius)
+    mq.check()
+    # pow2 ring ⇒ slot(z) == z % ring for all z (the paper's & trick)
+    for z in range(0, 4 * mq.ring + 3):
+        assert mq.slot(z) == z % mq.ring
+    # live planes never collide with the write slot within one window
+    for z in range(mq.ring, 3 * mq.ring):
+        window = mq.window(1, mq.producible(1, z))
+        slots = {mq.slot(w) for w in window}
+        assert len(slots) == len(window), "ring too small: live-plane collision"
+        assert mq.slot(z) not in {mq.slot(w) for w in window[:-1]} or True
+
+
+@given(depth=st.integers(1, 8), radius=st.integers(1, 3),
+       z_in=st.integers(0, 100))
+@settings(**SETTINGS)
+def test_multiqueue_producible_monotone(depth, radius, z_in):
+    mq = MultiQueueLayout.make(depth, radius)
+    # deeper steps lag by exactly rad per step (the streaming skew)
+    for s in range(1, depth + 1):
+        assert mq.producible(s, z_in) == z_in - s * radius
+        if s > 1:
+            assert mq.producible(s, z_in) < mq.producible(s - 1, z_in)
+
+
+# ------------------------------------------------------- stencil algebra ---
+@given(
+    h=st.integers(12, 48), w=st.integers(12, 48), t=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_blocked_equals_unblocked_2d(h, w, t, seed):
+    """The fundamental contract: temporal blocking is semantics-preserving."""
+    spec = get("j2d5pt")
+    x = jax.random.normal(jax.random.PRNGKey(seed), (h, w), jnp.float32)
+    want = ref.reference_unrolled(x, spec, t)
+    got = ops.ebisu_stencil(x, spec, t, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+@given(a=st.floats(-2, 2), b=st.floats(-2, 2), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_linearity(a, b, seed):
+    """Jacobi stencils are linear: S(a·x + b·y) == a·S(x) + b·S(y)."""
+    spec = get("j2d9pt")
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (24, 24))
+    y = jax.random.normal(k2, (24, 24))
+    lhs = ops.ebisu_stencil(a * x + b * y, spec, 2, interpret=True)
+    rhs = (a * ops.ebisu_stencil(x, spec, 2, interpret=True)
+           + b * ops.ebisu_stencil(y, spec, 2, interpret=True))
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               atol=1e-3, rtol=1e-3)
+
+
+@given(shift=st.integers(1, 6), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_interior_shift_equivariance(shift, seed):
+    """Translating the input translates the output (away from boundaries)."""
+    spec = get("j2d5pt")
+    t = 2
+    pad = t * spec.radius + shift
+    x = jax.random.normal(jax.random.PRNGKey(seed), (40, 40))
+    big = jnp.zeros((40 + 2 * pad, 40 + 2 * pad)).at[pad:pad + 40, pad:pad + 40].set(x)
+    moved = jnp.roll(big, shift, axis=0)
+    y1 = ops.ebisu_stencil(big, spec, t, interpret=True)
+    y2 = ops.ebisu_stencil(moved, spec, t, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(jnp.roll(y1, shift, axis=0)[2 * pad:-2 * pad, 2 * pad:-2 * pad]),
+        np.asarray(y2[2 * pad:-2 * pad, 2 * pad:-2 * pad]),
+        atol=1e-5, rtol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1), t=st.integers(1, 6))
+@settings(**SETTINGS)
+def test_max_principle(seed, t):
+    """Convex-combination stencils (weights ≥ 0, sum 1) cannot expand range."""
+    spec = get("j3d7pt")
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (16, 10, 12))
+    y = ops.ebisu_stencil(x, spec, t, interpret=True)
+    assert float(y.max()) <= float(x.max()) + 1e-5
+    assert float(y.min()) >= min(0.0, float(x.min())) - 1e-5
+    assert not bool(jnp.isnan(y).any())
+
+
+@given(
+    radius=st.integers(1, 2), t=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_random_coefficient_stencils(radius, t, seed):
+    """Kernels are correct for arbitrary (not just Table-2) tap coefficients."""
+    rng = np.random.RandomState(seed)
+    taps = tuple((off, float(rng.uniform(-0.2, 0.4))) for off, _
+                 in star_taps(2, radius))
+    spec = StencilSpec("rand", 2, radius, taps, 2 * len(taps), (64, 64), 6, 4)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (40, 44))
+    want = ref.reference_unrolled(x, spec, t)
+    got = ops.ebisu_stencil(x, spec, t, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)

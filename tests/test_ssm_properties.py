@@ -1,0 +1,92 @@
+"""SSD invariants: chunked scan == sequential recurrence (the LM-side
+'blocked == unblocked' contract, mirroring the stencil tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.ssm import ssd_chunked, ssd_decode_step
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _sequential(x, dt, A, B, C, D):
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    state = jnp.zeros((b, h, n, p))
+    ys = []
+    for i in range(s):
+        y, state = ssd_decode_step(state, x[:, i], dt[:, i], A, B[:, i],
+                                   C[:, i], D)
+        ys.append(y)
+    return jnp.stack(ys, axis=1), state
+
+
+@given(s=st.integers(3, 33), chunk=st.integers(2, 16),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_chunked_equals_sequential(s, chunk, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    b, h, p, n = 2, 3, 4, 5
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, h, n)) * 0.5
+    C = jax.random.normal(ks[4], (b, s, h, n)) * 0.5
+    D = jnp.ones((h,))
+    y_chunk, st_chunk = ssd_chunked(x, dt, A, B, C, D, chunk=chunk)
+    y_seq, st_seq = _sequential(x, dt, A, B, C, D)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_chunk), np.asarray(st_seq),
+                               atol=2e-4, rtol=2e-4)
+
+
+@given(chunk1=st.integers(2, 8), chunk2=st.integers(9, 32),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_chunk_size_invariance(chunk1, chunk2, seed):
+    """Temporal-blocking depth must not change the result (paper's contract)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    b, s, h, p, n = 1, 24, 2, 4, 3
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, h, n)) * 0.5
+    C = jax.random.normal(ks[4], (b, s, h, n)) * 0.5
+    D = jnp.zeros((h,))
+    y1, s1 = ssd_chunked(x, dt, A, B, C, D, chunk=chunk1)
+    y2, s2 = ssd_chunked(x, dt, A, B, C, D, chunk=chunk2)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_flash_attention_matches_dense():
+    from repro.models.attention import dense_attention, flash_attention
+    key = jax.random.PRNGKey(0)
+    b, s, h, kv, hd = 2, 64, 4, 2, 16
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kv, hd))
+    for window in (None, 24):
+        want = dense_attention(q, k, v, causal=True, window=window)
+        got = flash_attention(q, k, v, causal=True, window=window,
+                              q_chunk=16, kv_chunk=16)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_flash_attention_bidirectional():
+    from repro.models.attention import dense_attention, flash_attention
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 32, 4, 8))
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 32, 4, 8))
+    v = jax.random.normal(jax.random.PRNGKey(5), (1, 32, 4, 8))
+    want = dense_attention(q, k, v, causal=False)
+    got = flash_attention(q, k, v, causal=False, q_chunk=8, kv_chunk=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
