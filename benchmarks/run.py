@@ -2,17 +2,64 @@
 
 Prints ``name,us_per_call,derived`` CSV.  Run:
     PYTHONPATH=src python -m benchmarks.run [--only <prefix>]
+
+Kernel rows are additionally persisted (appended) to ``BENCH_kernels.json``
+at the repo root so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
 import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(_ROOT, "BENCH_kernels.json")
+
+
+def _git_rev() -> str:
+    try:
+        rev = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             cwd=_ROOT, capture_output=True, text=True,
+                             timeout=10).stdout.strip() or "unknown"
+        dirty = subprocess.run(["git", "status", "--porcelain"],
+                               cwd=_ROOT, capture_output=True, text=True,
+                               timeout=10).stdout.strip()
+        return f"{rev}-dirty" if dirty else rev
+    except Exception:  # noqa: BLE001
+        return "unknown"
+
+
+def persist_kernel_rows(rows) -> None:
+    """Append this run's kernel rows to BENCH_kernels.json (history kept)."""
+    hist = []
+    if os.path.exists(BENCH_JSON):
+        try:
+            with open(BENCH_JSON) as f:
+                hist = json.load(f).get("entries", [])
+        except (OSError, ValueError):
+            hist = []
+    entry = {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "rev": _git_rev(),
+        "rows": {name: {"us_per_call": round(float(us), 1),
+                        "derived": derived}
+                 for name, us, derived in rows},
+    }
+    hist.append(entry)
+    with open(BENCH_JSON, "w") as f:
+        json.dump({"entries": hist}, f, indent=2)
+        f.write("\n")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run only modules whose name contains this")
+    ap.add_argument("--no-persist", action="store_true",
+                    help="skip appending kernel rows to BENCH_kernels.json")
     args = ap.parse_args()
 
     from benchmarks import (bench_kernels, fig7_speedups, fig8_resources,
@@ -35,7 +82,10 @@ def main() -> None:
         if args.only and args.only not in name:
             continue
         try:
-            emit(mod.rows())
+            rows = mod.rows()
+            emit(rows)
+            if name == "kernels" and not args.no_persist:
+                persist_kernel_rows(rows)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)

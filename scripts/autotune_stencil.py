@@ -1,0 +1,107 @@
+"""Autotune sweep over (t, tile, mode) per Table-2 spec, vs the §6 planner.
+
+The paper's auto-tuning competitors (ARTEMIS, DRSTENCIL) search the
+configuration space empirically; EBISU's planner derives it analytically.
+This script runs both on reduced CPU domains: a wall-time sweep over
+``(t, bh|zc, mode)`` in interpret mode, then a cross-check of the
+planner's analytic pick against the sweep's best.
+
+Usage:
+    PYTHONPATH=src python scripts/autotune_stencil.py \
+        [--stencil j2d5pt,j3d7pt] [--scale 64] [--depths 1,2,4,6] \
+        [--json autotune.json]
+
+The cross-check is advisory on CPU (interpret-mode wall time is a proxy,
+not v5e time): the planner optimizes the §5 model, the sweep measures the
+interpreter — agreement on *shape* (deeper-better-than-shallow, fused over
+scratch) is the signal, exact tile agreement is not expected.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import time_fn  # noqa: E402
+from repro.core import roofline as rl
+from repro.core.planner import plan
+from repro.core.stencil_spec import TABLE2, get
+from repro.kernels import ref
+from repro.stencils.data import init_domain, reduced_domain
+
+
+def sweep_one(name: str, scale: int, depths: list[int]):
+    spec = get(name)
+    shape = reduced_domain(spec, scale)
+    x = init_domain(spec, shape)
+    p = plan(spec, rl.TPU_V5E)
+    rows = []
+    tiles = (64, 128, 256) if spec.ndim == 2 else (16, 32)
+    modes = ("fused", "scratch") if spec.ndim == 2 else ("fused",)
+    for t in sorted(set(depths) | {min(p.t, max(depths))}):
+        want = ref.reference(x, spec, t)
+        for tile in tiles:
+            for mode in modes:
+                if spec.ndim == 2:
+                    from repro.kernels.stencil2d import ebisu2d
+                    fn = lambda: ebisu2d(  # noqa: E731
+                        x, spec, t, bh=tile, mode=mode, interpret=True)
+                else:
+                    from repro.kernels.stencil3d import ebisu3d
+                    fn = lambda: ebisu3d(  # noqa: E731
+                        x, spec, t, zc=tile, interpret=True)
+                out = fn()
+                err = float(abs(out - want).max())
+                us = time_fn(fn, warmup=1, iters=3)
+                rows.append({"stencil": name, "t": t, "tile": tile,
+                             "mode": mode, "us": round(us, 1),
+                             "us_per_step": round(us / t, 1),
+                             "maxerr": err})
+                assert err < 1e-4, rows[-1]
+    best = min(rows, key=lambda r: r["us_per_step"])
+    return {
+        "stencil": name, "domain": list(shape), "sweep": rows, "best": best,
+        "planner": {"t": p.t, "tile": p.block[0],
+                    "lazy_batch": p.lazy_batch,
+                    "pp_gcells": round(p.pp.pp_cells_per_s / 1e9, 1)},
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--stencil", default="all")
+    ap.add_argument("--scale", type=int, default=64)
+    ap.add_argument("--depths", default="1,2,4")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    names = list(TABLE2) if args.stencil == "all" else args.stencil.split(",")
+    unknown = [n for n in names if n not in TABLE2]
+    if unknown:
+        ap.error(f"unknown stencil(s) {unknown}; choose from {list(TABLE2)}")
+    depths = [int(d) for d in args.depths.split(",")]
+
+    results = []
+    for name in names:
+        res = sweep_one(name, args.scale, depths)
+        results.append(res)
+        b, p = res["best"], res["planner"]
+        agree_depth = b["t"] >= max(1, p["t"] // 2) or b["t"] == max(
+            r["t"] for r in res["sweep"])
+        print(f"[autotune] {name:11s} best: t={b['t']} tile={b['tile']} "
+              f"mode={b['mode']} {b['us_per_step']:.0f}us/step | "
+              f"planner: t={p['t']} tile={p['tile']} "
+              f"lazy_batch={p['lazy_batch']} "
+              f"({'depth-consistent' if agree_depth else 'DEPTH MISMATCH'})",
+              flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+            f.write("\n")
+        print(f"[autotune] wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+#!/usr/bin/env bash
+# Tier-1 gate: run the ROADMAP tier-1 suite and print the pass/fail delta
+# vs the seed baseline, so "no worse than seed" is checked mechanically.
+#
+#   bash scripts/tier1.sh [extra pytest args]
+#
+# Seed baseline (PR 0): 25 failed, 165 passed, 3 collection errors.
+# The ROADMAP command is `pytest -x -q`; we drop -x and add
+# --continue-on-collection-errors so the counts are comparable to the
+# seed numbers (with -x the run halts at the first failure and no totals
+# exist to diff).
+set -uo pipefail
+cd "$(dirname "$0")/.."
+
+SEED_FAILED=25
+SEED_PASSED=165
+SEED_ERRORS=3
+
+log=$(mktemp)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
+    --continue-on-collection-errors "$@" 2>&1 | tee "$log" | tail -3
+
+summary=$(grep -E '[0-9]+ (failed|passed|error)' "$log" | tail -1)
+count() { echo "$summary" | grep -oE "[0-9]+ $1" | grep -oE '[0-9]+' || echo 0; }
+failed=$(count failed)
+passed=$(count passed)
+errors=$(count "errors?")
+rm -f "$log"
+
+echo
+echo "tier1: failed=$failed (seed $SEED_FAILED)  passed=$passed (seed $SEED_PASSED)  collection-errors=$errors (seed $SEED_ERRORS)"
+
+status=0
+[ "$failed" -gt "$SEED_FAILED" ] && { echo "tier1: FAIL — more failures than seed"; status=1; }
+[ "$errors" -gt "$SEED_ERRORS" ] && { echo "tier1: FAIL — more collection errors than seed"; status=1; }
+[ "$passed" -lt "$SEED_PASSED" ] && { echo "tier1: FAIL — fewer passes than seed"; status=1; }
+[ "$status" -eq 0 ] && echo "tier1: OK — no worse than seed"
+exit "$status"

@@ -14,12 +14,43 @@ Two circular addressing modes (§4.2.2):
 This module is the *index algebra*, shared by the Pallas kernels (which bake
 it into VMEM scratch indexing) and by the hypothesis property tests (which
 check the invariants on a host-side queue simulation).
+
+Lazy-batched streaming (§4.3.2) generalizes the queue advance from one
+plane to ``B`` planes per stage: ``choose_batch``/``stream_schedule`` are
+the shared batch-granularity algebra used by the 3-D streamer kernel and
+by the planner's ``lazy_batch`` decision, so both always agree on the
+batch a launch will actually run.
 """
 from __future__ import annotations
 
 import dataclasses
 
 from repro.core.planner import next_pow2
+
+
+def choose_batch(span: int, halo: int, target: int) -> int:
+    """Batch granularity for lazy streaming over ``span = zc + 2·halo`` planes.
+
+    The batch must be a multiple of ``halo`` (so every batch is whole
+    halo-sub-blocks of the halo-exact fetch) and divide ``span`` (so the
+    statically-unrolled schedule has no partial stage).  Returns the
+    largest such batch not exceeding ``max(target, halo)`` — ``target``
+    is the planner's ``lazy_batch``; the floor is one halo sub-block.
+    """
+    assert span % halo == 0 and span > 0, (span, halo)
+    d_max = span // halo
+    best = halo
+    for d in range(1, d_max + 1):
+        if d_max % d == 0 and halo * d <= max(target, halo):
+            best = halo * d
+    return best
+
+
+def stream_schedule(zc: int, halo: int, rad: int, target: int):
+    """(batch, window, stages) the batched streamer will use for a chunk."""
+    span = zc + 2 * halo
+    batch = choose_batch(span, halo, target)
+    return batch, batch + 2 * rad, span // batch
 
 
 @dataclasses.dataclass(frozen=True)

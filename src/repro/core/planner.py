@@ -81,13 +81,37 @@ def vmem_required_2d(spec: StencilSpec, t: int, bh: int, width: int,
 
 def vmem_required_3d(spec: StencilSpec, t: int, zc: int, ny: int, nx: int,
                      s_cell: int, num_buffers: int) -> int:
-    """3-D streaming kernel: t queue rings of pow2(2·rad+2) planes + I/O."""
+    """3-D streaming kernel: t queue rings of pow2(2·rad+2) planes + I/O.
+
+    Legacy plane-at-a-time model (kept as the capacity-affordability
+    yardstick the A100-vs-TPU comparison tests use); the planner itself
+    budgets with ``vmem_required_3d_batched``, which models the batched
+    shifting windows the kernel actually allocates.
+    """
     ring = next_pow2(2 * spec.radius + 2)
     planes = t * ring * ny * nx
     # I/O staging is per-plane (the kernel streams planes; the Pallas pipeline
     # may buffer more on TPU — Mosaic verifies the real budget at compile).
     io = num_buffers * 2 * ny * nx
     del zc
+    return int((planes + io) * s_cell)
+
+
+def vmem_required_3d_batched(spec: StencilSpec, t: int, zc: int, batch: int,
+                             ny: int, nx: int, s_cell: int,
+                             num_buffers: int) -> int:
+    """Batched z-streaming footprint: what ``ebisu3d`` actually claims.
+
+    ``t`` shifting windows of ``batch + 2·rad`` planes each (§4.2.2
+    shifting mode, advanced ``batch`` planes per stage), plus
+    ``num_buffers``-deep staging of the whole-block I/O the Pallas
+    pipeline delivers: ``zc + 2·halo`` input planes (the halo-exact
+    views) and ``zc`` output planes per grid step — the same quantity
+    the kernel's own ``vmem_limit_bytes`` hint is sized from.
+    """
+    w = batch + 2 * spec.radius
+    planes = t * w * ny * nx
+    io = num_buffers * (2 * zc + 2 * spec.halo(t)) * ny * nx
     return int((planes + io) * s_cell)
 
 
@@ -147,36 +171,73 @@ def plan(spec: StencilSpec, hw: rl.HardwareModel,
     budget = hw.onchip_device_bytes or hw.onchip_bytes
     min_w = max(8, int(math.ceil(rl.min_tile_width(spec, hw, rst=True))))
     ty, tx = ny, nx
-    while (vmem_required_3d(spec, 1, 16, ty, tx, hw.s_cell, 4)
-           > budget and max(ty, tx) > min_w):
+
+    def _floor_footprint(ty_c: int, tx_c: int, nbuf: int = 2) -> int:
+        """Smallest possible launch (t=1, minimal batch) at this xy tile."""
+        halo1 = spec.radius
+        zc1 = -(-max(16, 4 * halo1) // halo1) * halo1
+        return vmem_required_3d_batched(spec, 1, zc1, halo1, ty_c, tx_c,
+                                        hw.s_cell, nbuf)
+
+    while _floor_footprint(ty, tx) > budget and max(ty, tx) > min_w:
         if ty >= tx:
             ty = max(min_w, ty // 2)
         else:
             tx = max(min_w, tx // 2)
     par = minimal_parallelism(hw, ty * tx * hw.s_cell)
+    # Little's law wants deep pipelining, but capacity wins: clamp the
+    # buffer depth back to what leaves room for at least a t=1 launch.
+    nbuf = par.num_buffers
+    while nbuf > 2 and _floor_footprint(ty, tx, nbuf) > budget:
+        nbuf -= 1
+    if nbuf != par.num_buffers:
+        par = dataclasses.replace(par, num_buffers=nbuf)
 
-    # §5-model-driven choice of (t, zc): maximize PP subject to capacity.
+    # §5-model-driven choice of (t, zc, lazy_batch): maximize PP subject to
+    # capacity, budgeting the batched shifting windows the kernel allocates.
+    from repro.core.multiqueue import choose_batch
+
+    def _fit_batch(t_c: int, zc_c: int) -> int | None:
+        """Largest streaming batch whose windows + I/O staging fit."""
+        halo = spec.halo(t_c)
+        span = zc_c + 2 * halo
+        b = choose_batch(span, halo, zc_c)
+        while (vmem_required_3d_batched(spec, t_c, zc_c, b, ty, tx,
+                                        hw.s_cell, par.num_buffers) > budget):
+            if b <= halo:
+                return None
+            b = choose_batch(span, halo, b - halo)
+        return b
+
     best = None
     for t_c in range(1, max_t + 1):
-        zc_c = max(16, 4 * spec.halo(t_c))   # keep z-overlap V >= 2/3
-        if vmem_required_3d(spec, t_c, zc_c, ty, tx, hw.s_cell,
-                            par.num_buffers) > budget:
+        halo = spec.halo(t_c)
+        # keep z-overlap V >= 2/3; rounded so halo sub-blocks tile the chunk
+        zc_c = -(-max(16, 4 * halo) // halo) * halo
+        b = _fit_batch(t_c, zc_c)
+        if b is None:
             break
-        v = zc_c / (zc_c + 2 * spec.halo(t_c))
+        v = zc_c / (zc_c + 2 * halo)
         if (ty, tx) != (ny, nx):             # xy redundancy when tiled (Eq 9)
             v = max(0.01, v * rl.v_smtile(spec, t_c, (ty, tx)))
         v *= rl.v_dtile(_tile_time(spec, t_c, hw, zc_c * ty * tx), hw, 1)
         cand = rl.attainable(spec, t_c, hw, rst=True, v=v,
                              d_all=math.prod(domain))
-        if best is None or cand.pp_cells_per_s > best[2].pp_cells_per_s:
-            best = (t_c, zc_c, cand)
-    t, zc, res = best
+        if best is None or cand.pp_cells_per_s > best[3].pp_cells_per_s:
+            best = (t_c, zc_c, b, cand)
+    if best is None:
+        raise ValueError(
+            f"{spec.name}: on-chip budget {budget:.0f}B on {hw.name} cannot "
+            f"fit even a t=1 launch at xy tile ({ty}, {tx}) — no feasible "
+            f"EBISU plan")
+    t, zc, lazy, res = best
     return EbisuPlan(spec.name, hw.name, "device", t, (zc, ty, tx),
                      spec.halo(t), next_pow2(2 * rad + 2),
                      "shifting" if hw.name.startswith("a100") else "computing",
-                     lazy_batch=zc, parallelism=par,
-                     vmem_bytes=vmem_required_3d(spec, t, zc, ty, tx,
-                                                 hw.s_cell, par.num_buffers),
+                     lazy_batch=lazy, parallelism=par,
+                     vmem_bytes=vmem_required_3d_batched(
+                         spec, t, zc, lazy, ty, tx, hw.s_cell,
+                         par.num_buffers),
                      pp=res)
 
 

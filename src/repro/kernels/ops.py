@@ -3,6 +3,11 @@
 ``ebisu_stencil`` dispatches on dimensionality and picks interpret mode
 automatically (Pallas-TPU lowering on TPU backends, interpreter on CPU — the
 kernels are *written* for TPU BlockSpec/VMEM tiling and *validated* on CPU).
+
+When a §6 plan is supplied, its decisions are wired all the way into the
+kernels: tile height/chunk depth (``plan.block``), streaming batch
+(``plan.lazy_batch``) and DMA pipeline depth (``plan.parallelism.
+num_buffers``) — none of the planner's outputs are decorative.
 """
 from __future__ import annotations
 
@@ -17,6 +22,12 @@ from repro.kernels.stencil2d import ebisu2d
 from repro.kernels.stencil3d import ebisu3d
 
 
+# plan-less fallback tiles (also what bench_kernels models traffic with)
+DEFAULT_BH_2D = 128
+DEFAULT_ZC_3D = 16
+DEFAULT_ZC_STREAM_2D = 64
+
+
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
@@ -27,21 +38,29 @@ def ebisu_stencil(x: jnp.ndarray, spec: StencilSpec, t: int, *,
                   interpret: bool | None = None) -> jnp.ndarray:
     """Apply ``t`` temporally-blocked stencil steps (EBISU execution)."""
     interpret = _default_interpret() if interpret is None else interpret
+    lazy = plan.lazy_batch if plan is not None else None
+    nbuf = plan.parallelism.num_buffers if plan is not None else None
     if spec.ndim == 2:
         if mode == "stream":
-            # the paper's 2-D scheme: stream y through the circular
-            # multi-queue (no overlapped halo along the streamed dim)
-            zc = plan.block[0] if plan is not None else max(64, spec.halo(t))
+            # the paper's 2-D scheme: stream y through the multi-queue
+            # (no overlapped halo along the streamed dim)
+            zc = (plan.block[0] if plan is not None
+                  else max(DEFAULT_ZC_STREAM_2D, spec.halo(t)))
             zc = max(zc, spec.halo(t))
             y = ebisu3d(x[:, None, :], lift_2d_to_3d(spec), t, zc=zc,
+                        lazy_batch=lazy, num_buffers=nbuf,
                         interpret=interpret)
             return y[:, 0, :]
-        bh = plan.block[0] if plan is not None else max(128, spec.halo(t))
+        bh = (plan.block[0] if plan is not None
+              else max(DEFAULT_BH_2D, spec.halo(t)))
         bh = max(bh, spec.halo(t))
-        return ebisu2d(x, spec, t, bh=bh, mode=mode, interpret=interpret)
-    zc = plan.block[0] if plan is not None else max(16, spec.halo(t))
+        return ebisu2d(x, spec, t, bh=bh, mode=mode, num_buffers=nbuf,
+                       interpret=interpret)
+    zc = (plan.block[0] if plan is not None
+          else max(DEFAULT_ZC_3D, spec.halo(t)))
     zc = max(zc, spec.halo(t))
-    return ebisu3d(x, spec, t, zc=zc, interpret=interpret)
+    return ebisu3d(x, spec, t, zc=zc, lazy_batch=lazy, num_buffers=nbuf,
+                   interpret=interpret)
 
 
 def ebisu_stencil_planned(x: jnp.ndarray, spec: StencilSpec, *,

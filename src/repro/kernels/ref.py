@@ -4,6 +4,11 @@ Semantics: zero (Dirichlet) boundary — cells outside the domain read as 0 at
 *every* time step.  ``reference(x, spec, t)`` applies ``t`` plain steps; every
 temporally-blocked implementation in this repo must match it exactly (up to
 dtype rounding).
+
+One step is one call into the shared slice-based tap engine
+(``repro.kernels.taps``) — the same engine the Pallas kernels run, so the
+oracle and the blocked implementations cannot drift apart numerically
+(DESIGN.md §8.3).
 """
 from __future__ import annotations
 
@@ -11,26 +16,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.stencil_spec import StencilSpec
-
-
-def _shift_zero(xp: jnp.ndarray, off, rad: int, shape) -> jnp.ndarray:
-    """Slice a zero-padded array to realize a tap shift with zero fill."""
-    idx = tuple(
-        slice(rad + o, rad + o + n) for o, n in zip(off, shape)
-    )
-    return xp[idx]
+from repro.kernels.taps import engine_for
 
 
 def stencil_step(x: jnp.ndarray, spec: StencilSpec) -> jnp.ndarray:
-    """One Jacobi step of ``spec`` with zero boundaries. Works for 2-D / 3-D."""
-    rad = spec.radius
-    pad = [(rad, rad)] * x.ndim
-    xp = jnp.pad(x, pad)
-    acc = None
-    for off, c in spec.taps:
-        term = jnp.asarray(c, x.dtype) * _shift_zero(xp, off, rad, x.shape)
-        acc = term if acc is None else acc + term
-    return acc
+    """One Jacobi step of ``spec`` with zero boundaries. Works for 2-D / 3-D.
+
+    The whole array is treated as domain: the zero-fill shifts of the tap
+    engine realize the Dirichlet boundary exactly at the array edges.
+    """
+    return engine_for(spec.taps, spec.ndim).step(x)
 
 
 def reference(x: jnp.ndarray, spec: StencilSpec, t: int) -> jnp.ndarray:

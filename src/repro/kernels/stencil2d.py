@@ -6,25 +6,34 @@ TPU mapping of the paper's 2-D scheme (§4.1, §6.3.1, §6.4.1):
     ``bh`` output rows, resident in VMEM while ``t`` time steps are applied
     ("one tile at a time" — the TPU grid is sequential, so low occupancy is
     the native execution model).
-  * The strip's y-halo (``HALO = t·rad`` rows on each side) is assembled from
-    three shifted BlockSpec views of the input (blocks i-1, i, i+1) — Pallas
-    blocks cannot overlap, so neighbor views stand in for overlapped tiling.
-  * ``mode='fused'`` chains the ``t`` steps as pure jnp values — Mosaic keeps
-    intermediates in VREGs/VMEM without explicit round-trips: the TPU
-    realization of *redundant register streaming* (§4.3.3).
+  * **Halo-exact fetching**: the input is re-blocked at halo granularity.
+    A grid step reads its ``bh`` body rows plus one ``halo``-row sub-block
+    above and below (``HALO = t·rad``), so input traffic per strip is
+    ``bh + 2·halo`` rows — not the ``3·bh`` of fetching whole neighbor
+    blocks to use only their rims.  ``bh`` is rounded up to a multiple of
+    ``halo`` so the rim sub-blocks are block-aligned (Pallas blocks cannot
+    overlap; DESIGN.md §8.4).
+  * Taps are applied by the shared slice-based engine
+    (``repro.kernels.taps``): zero-fill static slices, no ``jnp.roll`` —
+    no wrap-around, so the only masking left is the Dirichlet domain
+    boundary, built **once** per strip and applied as a single multiply
+    per step (DESIGN.md §8.1-2).
+  * ``mode='fused'`` chains the ``t`` steps as pure jnp values — Mosaic
+    keeps intermediates in VREGs/VMEM without explicit round-trips: the
+    TPU realization of *redundant register streaming* (§4.3.3).
   * ``mode='scratch'`` ping-pongs two explicit VMEM scratch buffers — the
     paper's double-buffering, i.e. lazy streaming with a single queue
     (§4.3.2); kept for the Fig-9-style ablation.
 
-Boundary semantics: zero outside the domain at every step.  The kernel
-re-applies an iota mask (global row/col ids) after assembly and after every
-fused step, so wrap-around garbage from the roll-based tap shifts stays
-confined to rows that can never reach the output (see DESIGN.md §8.1-2).
+Boundary semantics: zero outside the domain at every step (the oracle's
+contract).  The domain sits at rows ``[0, height)`` × cols ``[0, width)``
+of the padded compute array, so the top/left Dirichlet boundaries coincide
+with the zero-fill slicing edge for free; bottom/right (and the strip's
+clamped rim sub-blocks at the domain edges) are zeroed by the strip mask.
 """
 from __future__ import annotations
 
 import functools
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -32,45 +41,36 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.stencil_spec import StencilSpec
+from repro.kernels.taps import engine_for
 
 
-def _apply_taps_2d(vals: jnp.ndarray, taps) -> jnp.ndarray:
-    """One stencil step on a (SH, Wp) strip using roll-based shifts."""
-    acc = None
-    for (dy, dx), c in taps:
-        term = vals
-        if dy:
-            term = jnp.roll(term, -dy, axis=0)
-        if dx:
-            term = jnp.roll(term, -dx, axis=1)
-        term = term * jnp.float32(c)
-        acc = term if acc is None else acc + term
-    return acc
-
-
-def _strip_kernel(prev_ref, cur_ref, next_ref, out_ref, *scratch,
-                  taps: Sequence, t: int, rad: int, bh: int, halo: int,
+def _strip_kernel(top_ref, mid_ref, bot_ref, out_ref, *scratch,
+                  taps, t: int, bh: int, halo: int,
                   height: int, width: int, mode: str):
     i = pl.program_id(0)
     sh = bh + 2 * halo
+    wp = mid_ref.shape[1]
+    engine = engine_for(taps, 2)
 
+    # --- one-time Dirichlet boundary mask (DESIGN.md §8.2).  Columns need no
+    # mask: the strip is cropped to the true domain width, so the zero-fill
+    # slicing edge *is* the left/right Dirichlet boundary.  Rows keep a
+    # (sh, 1) mask — the top/bottom domain boundary moves with the strip.
     row0 = i * bh - halo
-    rows = jax.lax.broadcasted_iota(jnp.int32, (sh, prev_ref.shape[1]), 0) + row0
-    cols = jax.lax.broadcasted_iota(jnp.int32, (sh, prev_ref.shape[1]), 1)
-    valid = (rows >= 0) & (rows < height) & (cols >= rad) & (cols < rad + width)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (sh, 1), 0) + row0
+    mask = ((rows >= 0) & (rows < height)).astype(jnp.float32)
 
-    # --- assemble the haloed strip from the three neighbor views ------------
-    top = prev_ref[bh - halo:, :] if halo else None
-    mid = cur_ref[...]
-    bot = next_ref[:halo, :] if halo else None
-    parts = [p for p in (top, mid, bot) if p is not None]
-    vals = jnp.concatenate(parts, axis=0) if len(parts) > 1 else mid
-    vals = jnp.where(valid, vals.astype(jnp.float32), 0.0)
+    # --- assemble the haloed strip from the halo-exact views ----------------
+    vals = jnp.concatenate(
+        [top_ref[...], mid_ref[...], bot_ref[...]], axis=0
+    )[:, :width].astype(jnp.float32) * mask
+
+    def emit(final: jnp.ndarray) -> None:
+        body = jnp.pad(final[halo:halo + bh, :], ((0, 0), (0, wp - width)))
+        out_ref[...] = body.astype(out_ref.dtype)
 
     if mode == "fused":
-        for _ in range(t):
-            vals = jnp.where(valid, _apply_taps_2d(vals, taps), 0.0)
-        out_ref[...] = vals[halo:halo + bh, :].astype(out_ref.dtype)
+        emit(engine.chain(vals, t, mask))
         return
 
     # --- 'scratch': explicit VMEM double-buffering (paper's lazy streaming /
@@ -79,59 +79,99 @@ def _strip_kernel(prev_ref, cur_ref, next_ref, out_ref, *scratch,
     buf0[...] = vals
     for s in range(t):
         src, dst = (buf0, buf1) if s % 2 == 0 else (buf1, buf0)
-        dst[...] = jnp.where(valid, _apply_taps_2d(src[...], taps), 0.0)
-    final = buf1 if t % 2 == 1 else buf0
-    out_ref[...] = final[halo:halo + bh, :].astype(out_ref.dtype)
+        dst[...] = engine.step(src[...], mask)
+    emit(buf1[...] if t % 2 == 1 else buf0[...])
 
 
 def _pad_to(n: int, m: int) -> int:
     return (n + m - 1) // m * m
 
 
+def strip_geometry(spec: StencilSpec, t: int, bh: int) -> tuple[int, int]:
+    """Resolve the (bh, halo) a 2-D launch will actually use.
+
+    ``bh`` is raised to at least one halo and rounded up to a multiple of
+    ``halo`` so the rim sub-blocks of the halo-exact fetch are aligned.
+    """
+    halo = spec.halo(t)
+    bh = max(bh, halo)
+    return _pad_to(bh, halo), halo
+
+
+def input_rows_per_strip(spec: StencilSpec, t: int, bh: int) -> tuple[int, int]:
+    """Modeled input traffic: (rows fetched per strip, strip body rows).
+
+    The halo-exact BlockSpecs fetch exactly ``bh + 2·halo`` rows per
+    ``bh``-row strip, i.e. each input element is read at most
+    ``1 + 2·halo/bh`` times per sweep of ``t`` steps.
+    """
+    bh, halo = strip_geometry(spec, t, bh)
+    return bh + 2 * halo, bh
+
+
 @functools.partial(jax.jit, static_argnames=("spec", "t", "bh", "mode",
-                                             "interpret"))
+                                             "num_buffers", "interpret"))
 def ebisu2d(x: jnp.ndarray, spec: StencilSpec, t: int, *, bh: int = 128,
-            mode: str = "fused", interpret: bool = True) -> jnp.ndarray:
+            mode: str = "fused", num_buffers: int | None = None,
+            interpret: bool = True) -> jnp.ndarray:
     """Apply ``t`` temporally-blocked steps of ``spec`` to a 2-D field."""
     assert spec.ndim == 2
     height, width = x.shape
-    rad, halo = spec.radius, spec.halo(t)
-    assert halo <= bh, f"neighbor-block halo needs t*rad={halo} <= bh={bh}"
+    bh, halo = strip_geometry(spec, t, bh)
+    sh = bh + 2 * halo
+    k = bh // halo                      # halo sub-blocks per strip body
 
     hp = _pad_to(height, bh)
-    wp = _pad_to(rad + width + rad, 128)
-    xp = jnp.zeros((hp, wp), jnp.float32).at[:height, rad:rad + width].set(
+    wp = _pad_to(width, 128)
+    xp = jnp.zeros((hp, wp), jnp.float32).at[:height, :width].set(
         x.astype(jnp.float32))
     grid = hp // bh
-    sh = bh + 2 * halo
+    nsub = hp // halo
 
-    def idx_prev(i):
-        return (jnp.maximum(i - 1, 0), 0)
+    # Halo-exact index maps: the rim views are (halo, wp) sub-blocks — the
+    # last sub-block of strip i-1 and the first of strip i+1.  Clamped ids at
+    # the domain edges deliver garbage rows that the strip mask zeroes.
+    def idx_top(i):
+        return (jnp.maximum(i * k - 1, 0), 0)
 
-    def idx_cur(i):
+    def idx_mid(i):
         return (i, 0)
 
-    def idx_next(i):
-        return (jnp.minimum(i + 1, grid - 1), 0)
+    def idx_bot(i):
+        return (jnp.minimum((i + 1) * k, nsub - 1), 0)
 
     kern = functools.partial(
-        _strip_kernel, taps=spec.taps, t=t, rad=rad, bh=bh, halo=halo,
+        _strip_kernel, taps=spec.taps, t=t, bh=bh, halo=halo,
         height=height, width=width, mode=mode)
 
     scratch_shapes = []
     if mode == "scratch":
-        scratch_shapes = [pltpu.VMEM((sh, wp), jnp.float32),
-                          pltpu.VMEM((sh, wp), jnp.float32)]
+        scratch_shapes = [pltpu.VMEM((sh, width), jnp.float32),
+                          pltpu.VMEM((sh, width), jnp.float32)]
+
+    # §6.1 wiring: grid steps are independent ⇒ 'parallel' semantics; the
+    # planner's num_buffers (DMA pipeline depth) sizes the VMEM budget hint.
+    params = {}
+    if not interpret:
+        io_bytes = (sh + bh) * wp * 4
+        limit = None
+        if num_buffers is not None:
+            scr = 2 * sh * wp * 4 if mode == "scratch" else 0
+            limit = min(128 << 20, max(32 << 20,
+                                       2 * (scr + num_buffers * io_bytes)))
+        params["compiler_params"] = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel",), vmem_limit_bytes=limit)
 
     out = pl.pallas_call(
         kern,
         grid=(grid,),
-        in_specs=[pl.BlockSpec((bh, wp), idx_prev),
-                  pl.BlockSpec((bh, wp), idx_cur),
-                  pl.BlockSpec((bh, wp), idx_next)],
-        out_specs=pl.BlockSpec((bh, wp), idx_cur),
+        in_specs=[pl.BlockSpec((halo, wp), idx_top),
+                  pl.BlockSpec((bh, wp), idx_mid),
+                  pl.BlockSpec((halo, wp), idx_bot)],
+        out_specs=pl.BlockSpec((bh, wp), idx_mid),
         out_shape=jax.ShapeDtypeStruct((hp, wp), x.dtype),
         scratch_shapes=scratch_shapes,
         interpret=interpret,
+        **params,
     )(xp, xp, xp)
-    return out[:height, rad:rad + width]
+    return out[:height, :width]

@@ -1,167 +1,204 @@
-"""EBISU-3D Pallas kernel: z-streaming with a circular multi-queue in VMEM.
+"""EBISU-3D Pallas kernel: lazy-batched z-streaming through VMEM queues.
 
-This is the paper's Fig. 5/6 scheme, verbatim, on the TPU memory hierarchy:
+This is the paper's Fig. 5/6 scheme on the TPU memory hierarchy, with the
+§6 planner's decisions wired all the way in:
 
-  * Each Pallas grid step is a *device tile*: a chunk of ``zc`` output planes.
-    The chunk's z-halo (``HALO = t·rad`` planes each side) comes from three
-    shifted BlockSpec views (overlapped tiling in z — the redundancy cost is
-    exactly the paper's ``V_SMtile`` term, Eq 9).
-  * Inside the kernel, planes stream through a **circular multi-queue**: one
-    ring of ``R = next_pow2(2·rad+2)`` planes per temporal step, held in VMEM
-    scratch.  Ring addressing is the paper's "computing address" mode:
-    ``slot = z & (R-1)`` (§4.2.2).
-  * When input plane ``z`` (time 0) is enqueued, planes ``z - s·rad`` of time
-    ``s`` become computable — dequeue of step ``s`` overlaps enqueue of step
-    ``s+1`` ("seamless time-step transitions").
+  * Each Pallas grid step is a *device tile*: a chunk of ``zc`` output
+    planes.  **Halo-exact fetching**: the chunk's z-context comes from one
+    ``halo``-plane sub-block on each side (``HALO = t·rad``) selected by
+    halo-granular BlockSpecs — input traffic per grid step is
+    ``zc + 2·halo`` planes, not the ``3·zc`` of whole neighbor chunks
+    (DESIGN.md §8.4).  ``zc`` is rounded up to a multiple of ``halo`` so
+    the rim sub-blocks are block-aligned.
+  * Inside the kernel, planes stream through a **multi-queue**: one
+    sliding window of ``W = B + 2·rad`` planes per temporal step, held in
+    VMEM scratch.  This is the paper's *shifting* addressing mode
+    (§4.2.2) batched by ``B = lazy_batch`` planes: per pipeline stage the
+    window shifts by ``B`` and one *batched* vectorized tap application
+    (``taps.TapEngine.window_step``) advances ``B`` planes of a temporal
+    step at once — lazy streaming with honest batch granularity instead
+    of a plane-at-a-time ``fori_loop``.
+  * When input planes ``[z, z+B)`` (time 0) are enqueued, planes
+    ``[z - s·rad, z+B - s·rad)`` of time ``s`` become computable —
+    dequeue of step ``s`` overlaps enqueue of step ``s+1`` ("seamless
+    time-step transitions").  The whole schedule is statically unrolled
+    (``(zc + 2·halo)/B`` stages), so every queue access is a static
+    slice — no dynamic ring arithmetic on the hot path.
   * The final time step is written straight to the output block — lazy
     streaming's "one sync per tile": a grid step has a single pipeline
     boundary regardless of depth ``t``.
 
-Boundary semantics: zero outside the domain at every step (planes whose
-global z falls outside [0, Z) are zeroed after compute; y/x pads are re-masked
-every step, so roll-based tap shifts cannot leak across the boundary).
+Boundary semantics: zero outside the domain at every step.  The domain
+sits at ``[0, zdim) × [0, ydim) × [0, xdim)`` of the padded array; the
+per-batch {0,1} mask (global-z validity × in-plane validity) is applied
+as one multiply per batched tap application (DESIGN.md §8.1-2).  Queue
+windows are zero-initialized so strip planes below the chunk read as the
+tap engine's zero-fill — garbage in the out-of-strip "error zone" decays
+before it can reach an output plane (DESIGN.md §8.3).
 """
 from __future__ import annotations
 
 import functools
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.multiqueue import MultiQueueLayout
+from repro.core.multiqueue import stream_schedule
 from repro.core.stencil_spec import StencilSpec
-
-
-def _taps_by_dz(taps):
-    groups: dict[int, list] = {}
-    for (dz, dy, dx), c in taps:
-        groups.setdefault(dz, []).append(((dy, dx), c))
-    return sorted(groups.items())
-
-
-def _apply_plane_taps(plane: jnp.ndarray, taps2d) -> jnp.ndarray:
-    acc = None
-    for (dy, dx), c in taps2d:
-        term = plane
-        if dy:
-            term = jnp.roll(term, -dy, axis=0)
-        if dx:
-            term = jnp.roll(term, -dx, axis=1)
-        term = term * jnp.float32(c)
-        acc = term if acc is None else acc + term
-    return acc
-
-
-def _stream_kernel(prev_ref, cur_ref, next_ref, out_ref, buf,
-                   *, groups, t: int, rad: int, zc: int, halo: int,
-                   ring: int, zdim: int, ydim: int, xdim: int):
-    i = pl.program_id(0)
-    yp, xp = cur_ref.shape[1], cur_ref.shape[2]
-    mask = ring - 1
-
-    ys = jax.lax.broadcasted_iota(jnp.int32, (yp, xp), 0)
-    xs = jax.lax.broadcasted_iota(jnp.int32, (yp, xp), 1)
-    valid_yx = (ys >= rad) & (ys < rad + ydim) & (xs >= rad) & (xs < rad + xdim)
-
-    def rd(q, z):
-        return buf[pl.ds(q * ring + (z & mask), 1)][0]
-
-    def wr(q, z, plane):
-        buf[pl.ds(q * ring + (z & mask), 1)] = plane[None]
-
-    def body(zin, _):
-        zg = i * zc - halo + zin           # global z of the incoming plane
-
-        # ---- enqueue input plane zin into queue 0 (time 0) -----------------
-        def fetch(ref, idx):
-            return ref[pl.ds(idx, 1)][0].astype(jnp.float32)
-
-        @pl.when(zin < halo)
-        def _():
-            plane = fetch(prev_ref, zin + zc - halo)
-            ok = valid_yx & (zg >= 0) & (zg < zdim)
-            wr(0, zin, jnp.where(ok, plane, 0.0))
-
-        @pl.when((zin >= halo) & (zin < halo + zc))
-        def _():
-            plane = fetch(cur_ref, zin - halo)
-            ok = valid_yx & (zg >= 0) & (zg < zdim)
-            wr(0, zin, jnp.where(ok, plane, 0.0))
-
-        @pl.when(zin >= halo + zc)
-        def _():
-            plane = fetch(next_ref, zin - halo - zc)
-            ok = valid_yx & (zg >= 0) & (zg < zdim)
-            wr(0, zin, jnp.where(ok, plane, 0.0))
-
-        # ---- advance each deeper queue: plane zin - s·rad of time s --------
-        for s in range(1, t + 1):
-            z_s = zin - s * rad
-            zg_s = i * zc - halo + z_s
-
-            def compute(z_s=z_s, zg_s=zg_s, s=s):
-                acc = None
-                for dz, taps2d in groups:
-                    contrib = _apply_plane_taps(rd(s - 1, z_s + dz), taps2d)
-                    acc = contrib if acc is None else acc + contrib
-                ok = valid_yx & (zg_s >= 0) & (zg_s < zdim)
-                return jnp.where(ok, acc, 0.0)
-
-            if s < t:
-                @pl.when(z_s >= 0)
-                def _(z_s=z_s, s=s, compute=compute):
-                    wr(s, z_s, compute())
-            else:
-                @pl.when((z_s >= halo) & (z_s < halo + zc))
-                def _(z_s=z_s, compute=compute):
-                    out_ref[pl.ds(z_s - halo, 1)] = (
-                        compute()[None].astype(out_ref.dtype))
-        return ()
-
-    jax.lax.fori_loop(0, zc + 2 * halo, body, ())
+from repro.kernels.taps import engine_for
 
 
 def _pad_to(n: int, m: int) -> int:
     return (n + m - 1) // m * m
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "t", "zc", "interpret"))
+def chunk_geometry(spec: StencilSpec, t: int, zc: int) -> tuple[int, int]:
+    """Resolve the (zc, halo) a 3-D launch will actually use.
+
+    ``zc`` is raised to at least one halo and rounded up to a multiple of
+    ``halo`` so the rim sub-blocks of the halo-exact fetch are aligned.
+    """
+    halo = spec.halo(t)
+    zc = max(zc, halo)
+    return _pad_to(zc, halo), halo
+
+
+def input_planes_per_chunk(spec: StencilSpec, t: int, zc: int) -> tuple[int, int]:
+    """Modeled input traffic: (planes fetched per chunk, chunk body planes)."""
+    zc, halo = chunk_geometry(spec, t, zc)
+    return zc + 2 * halo, zc
+
+
+def _stream_kernel(top_ref, mid_ref, bot_ref, out_ref, buf, *,
+                   taps, t: int, rad: int, zc: int, halo: int, batch: int,
+                   zdim: int, ydim: int, xdim: int):
+    i = pl.program_id(0)
+    engine = engine_for(taps, 3)
+    yp, xp = mid_ref.shape[1], mid_ref.shape[2]
+    sz = zc + 2 * halo
+    kz = zc // halo
+    w = batch + 2 * rad
+    z_base = i * zc - halo               # global z of strip plane 0
+
+    def zmask(p0: int, n: int) -> jnp.ndarray:
+        """Global-z Dirichlet validity of strip planes [p0, p0+n)."""
+        zg = z_base + p0 + jax.lax.broadcasted_iota(jnp.int32, (n, 1, 1), 0)
+        return ((zg >= 0) & (zg < zdim)).astype(jnp.float32)
+
+    # The pipeline computes on planes cropped to the true domain extent:
+    # the y/x pad lanes exist only for TPU tile alignment, and cropping
+    # makes the zero-fill slicing edge coincide with the in-plane Dirichlet
+    # boundary — no y/x mask at all (DESIGN.md §8.2).  Only the z boundary
+    # stays a per-batch mask (it moves with the grid step).
+    def crop(planes: jnp.ndarray) -> jnp.ndarray:
+        return planes[:, :ydim, :xdim]
+
+    # Queue windows are per-grid-step state.  Only the tail-source slice
+    # [batch, w) must be zeroed: the first shift of each queue copies it to
+    # the window head, where it stands in for the planes below the strip —
+    # the zero-fill edge (DESIGN.md §8.3); the rest is overwritten before
+    # it is ever read.
+    buf[:, batch:w] = jnp.zeros((t, w - batch, ydim, xdim), jnp.float32)
+
+    def advance(queue: int, planes: jnp.ndarray) -> None:
+        """Shift queue's window by one batch (paper's 'shifting' mode)."""
+        tail = buf[queue, batch:w]
+        buf[queue, 0:2 * rad] = tail
+        buf[queue, 2 * rad:w] = planes
+
+    for n in range(sz // batch):
+        z0 = n * batch
+        # ---- batched enqueue of input planes [z0, z0+batch) into queue 0.
+        # A batch is whole halo-sub-blocks, each living in exactly one of
+        # the three halo-exact views.
+        chunks = []
+        for j in range(z0 // halo, (z0 + batch) // halo):
+            if j == 0:
+                chunks.append(top_ref[...])
+            elif j <= kz:
+                chunks.append(mid_ref[(j - 1) * halo:j * halo])
+            else:
+                chunks.append(bot_ref[...])
+        newp = (crop(jnp.concatenate(chunks, axis=0)).astype(jnp.float32)
+                * zmask(z0, batch))
+        advance(0, newp)
+
+        # ---- cascade: one batched tap application per temporal step -----
+        for s in range(1, t + 1):
+            p0 = z0 - s * rad            # first plane this step produces
+            window = buf[s - 1][...]     # (w, ydim, xdim), already advanced
+            planes = engine.window_step(window, batch, mask=zmask(p0, batch))
+            if s < t:
+                advance(s, planes)
+            else:
+                lo, hi = max(p0, halo), min(p0 + batch, halo + zc)
+                if lo < hi:
+                    body = planes[lo - p0:hi - p0]
+                    body = jnp.pad(body, ((0, 0), (0, yp - ydim),
+                                          (0, xp - xdim)))
+                    out_ref[lo - halo:hi - halo] = body.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "t", "zc", "lazy_batch",
+                                             "num_buffers", "interpret"))
 def ebisu3d(x: jnp.ndarray, spec: StencilSpec, t: int, *, zc: int = 16,
+            lazy_batch: int | None = None, num_buffers: int | None = None,
             interpret: bool = True) -> jnp.ndarray:
     """Apply ``t`` temporally-blocked steps of a 3-D ``spec`` via z-streaming."""
     assert spec.ndim == 3
     zdim, ydim, xdim = x.shape
-    rad, halo = spec.radius, spec.halo(t)
-    assert halo <= zc, f"neighbor-block halo needs t*rad={halo} <= zc={zc}"
-    layout = MultiQueueLayout.make(t, rad, "computing")
-    layout.check()
-    ring = layout.ring
+    rad = spec.radius
+    zc, halo = chunk_geometry(spec, t, zc)
+    kz = zc // halo
+    batch, w, _ = stream_schedule(zc, halo, rad,
+                                  lazy_batch if lazy_batch else zc)
 
     zp = _pad_to(zdim, zc)
-    yp = _pad_to(rad + ydim + rad, 8)
-    xp = _pad_to(rad + xdim + rad, 128)
+    yp = _pad_to(ydim, 8)
+    xp = _pad_to(xdim, 128)
     xpad = jnp.zeros((zp, yp, xp), jnp.float32).at[
-        :zdim, rad:rad + ydim, rad:rad + xdim].set(x.astype(jnp.float32))
+        :zdim, :ydim, :xdim].set(x.astype(jnp.float32))
     grid = zp // zc
+    nsub = zp // halo
+
+    def idx_top(i):
+        return (jnp.maximum(i * kz - 1, 0), 0, 0)
+
+    def idx_mid(i):
+        return (i, 0, 0)
+
+    def idx_bot(i):
+        return (jnp.minimum((i + 1) * kz, nsub - 1), 0, 0)
 
     kern = functools.partial(
-        _stream_kernel, groups=_taps_by_dz(spec.taps), t=t, rad=rad, zc=zc,
-        halo=halo, ring=ring, zdim=zdim, ydim=ydim, xdim=xdim)
+        _stream_kernel, taps=spec.taps, t=t, rad=rad, zc=zc, halo=halo,
+        batch=batch, zdim=zdim, ydim=ydim, xdim=xdim)
+
+    params = {}
+    if not interpret:
+        limit = None
+        if num_buffers is not None:
+            scr = t * w * yp * xp * 4
+            io = (zc + 2 * halo + zc) * yp * xp * 4
+            limit = min(128 << 20, max(32 << 20,
+                                       2 * (scr + num_buffers * io)))
+        params["compiler_params"] = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel",), vmem_limit_bytes=limit)
 
     out = pl.pallas_call(
         kern,
         grid=(grid,),
         in_specs=[
-            pl.BlockSpec((zc, yp, xp), lambda i: (jnp.maximum(i - 1, 0), 0, 0)),
-            pl.BlockSpec((zc, yp, xp), lambda i: (i, 0, 0)),
-            pl.BlockSpec((zc, yp, xp), lambda i: (jnp.minimum(i + 1, grid - 1), 0, 0)),
+            pl.BlockSpec((halo, yp, xp), idx_top),
+            pl.BlockSpec((zc, yp, xp), idx_mid),
+            pl.BlockSpec((halo, yp, xp), idx_bot),
         ],
-        out_specs=pl.BlockSpec((zc, yp, xp), lambda i: (i, 0, 0)),
+        out_specs=pl.BlockSpec((zc, yp, xp), idx_mid),
         out_shape=jax.ShapeDtypeStruct((zp, yp, xp), x.dtype),
-        scratch_shapes=[pltpu.VMEM((t * ring, yp, xp), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((t, w, ydim, xdim), jnp.float32)],
         interpret=interpret,
+        **params,
     )(xpad, xpad, xpad)
-    return out[:zdim, rad:rad + ydim, rad:rad + xdim]
+    return out[:zdim, :ydim, :xdim]

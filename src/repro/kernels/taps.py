@@ -1,0 +1,186 @@
+"""Unified slice-based tap engine — the one stencil-application core.
+
+Every stencil application in the repo (the 2-D strip kernel, the 3-D
+streamer, and the pure-jnp oracle) goes through this module, so the
+blocked kernels and the reference they are validated against share one
+numerical definition of "apply the taps" (see DESIGN.md §8).
+
+Semantics: *zero-fill* shifts.  ``apply_taps`` treats everything outside
+the array extent as 0 — a static slice of a zero-padded buffer, never
+``jnp.roll``.  No wrap-around means no per-step wrap remask: the only
+masking a kernel still needs is the Dirichlet boundary of the *domain*
+(which can sit strictly inside a padded strip), and that collapses to a
+single {0,1} mask built once at strip assembly and applied as one
+multiply per step (DESIGN.md §8.2).
+
+Three application paths:
+
+  * generic   — pad the tap axes once, then one static slice + FMA per
+                tap.  Works for any tap set (box stencils).
+  * star      — separable axis-wise accumulation: one 1-axis pad + 2·rad
+                slices per axis plus the center term.  Slices stay
+                contiguous along the untouched minor axes, which is both
+                cheaper to move and what the VPU wants.
+  * dz-grouped window — for the 3-D streamer: a *valid*-mode application
+                along z over a ``B + 2·rad``-plane window producing ``B``
+                planes, with zero-fill only in-plane.  Every z-slice is
+                static, so the streamer's batched advance is one
+                vectorized call per temporal step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax.numpy as jnp
+
+Taps = Sequence[tuple[tuple[int, ...], float]]
+
+
+def tap_radius(taps: Taps) -> int:
+    """Largest |offset| component — the pad the generic path needs."""
+    return max((max(abs(o) for o in off) for off, _ in taps), default=0)
+
+
+def group_by_leading(taps: Taps):
+    """Group 3-D taps by dz: ``[(dz, [((dy, dx), c), ...]), ...]`` sorted.
+
+    The dz-grouped form is what z-streaming consumes: each group is an
+    in-plane (2-D) tap set contributed by one relative input plane.
+    """
+    groups: dict[int, list] = {}
+    for off, c in taps:
+        dz, rest = off[0], tuple(off[1:])
+        groups.setdefault(dz, []).append((rest, c))
+    return sorted((dz, tuple(ts)) for dz, ts in groups.items())
+
+
+def split_star(taps: Taps, ndim: int):
+    """Split a star tap set into (center_coeff, per-axis arms).
+
+    Returns ``None`` if any tap has more than one nonzero offset component
+    (i.e. the set is not a star and the axis-wise path does not apply).
+    ``arms[a]`` is a list of ``(offset, coeff)`` with offset != 0 along
+    tap-axis ``a``.
+    """
+    center = 0.0
+    arms: list[list[tuple[int, float]]] = [[] for _ in range(ndim)]
+    for off, c in taps:
+        nz = [i for i, o in enumerate(off) if o]
+        if not nz:
+            center += c
+        elif len(nz) == 1:
+            arms[nz[0]].append((off[nz[0]], c))
+        else:
+            return None
+    return center, arms
+
+
+def apply_taps_generic(x: jnp.ndarray, taps: Taps, ndim: int) -> jnp.ndarray:
+    """One stencil application on the last ``ndim`` axes of ``x``.
+
+    Pads the tap axes once by the tap radius, then realizes every tap as
+    a single static slice of the padded buffer.  Leading axes of ``x``
+    (e.g. a batch of planes) broadcast through untouched.
+    """
+    rad = tap_radius(taps)
+    lead = x.ndim - ndim
+    pad = [(0, 0)] * lead + [(rad, rad)] * ndim
+    xp = jnp.pad(x, pad)
+    shape = x.shape[lead:]
+    acc = None
+    for off, c in taps:
+        idx = (Ellipsis,) + tuple(
+            slice(rad + o, rad + o + n) for o, n in zip(off, shape))
+        term = xp[idx] * jnp.asarray(c, x.dtype)
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def apply_taps_star(x: jnp.ndarray, center: float,
+                    arms: Sequence[Sequence[tuple[int, float]]],
+                    ndim: int) -> jnp.ndarray:
+    """Axis-wise (separable-shape) accumulation for star tap sets."""
+    acc = x * jnp.asarray(center, x.dtype)
+    lead = x.ndim - ndim
+    for a, axis_arms in enumerate(arms):
+        if not axis_arms:
+            continue
+        axis = lead + a
+        rad = max(abs(o) for o, _ in axis_arms)
+        n = x.shape[axis]
+        pad = [(0, 0)] * x.ndim
+        pad[axis] = (rad, rad)
+        xp = jnp.pad(x, pad)
+        for off, c in axis_arms:
+            idx = [slice(None)] * x.ndim
+            idx[axis] = slice(rad + off, rad + off + n)
+            acc = acc + xp[tuple(idx)] * jnp.asarray(c, x.dtype)
+    return acc
+
+
+class TapEngine:
+    """A tap set compiled to its cheapest application path.
+
+    ``step(x, mask)`` applies one stencil step to the last ``ndim`` axes
+    of ``x`` with zero-fill shifts, then multiplies by ``mask`` (the
+    one-time Dirichlet boundary mask — pass ``None`` only when the array
+    edge *is* the domain boundary on every side).
+    """
+
+    def __init__(self, taps: Taps, ndim: int):
+        self.taps = tuple(taps)
+        self.ndim = ndim
+        self.radius = tap_radius(taps)
+        self._star = split_star(taps, ndim)
+        self.groups = group_by_leading(taps) if ndim == 3 else None
+
+    def step(self, x: jnp.ndarray, mask: jnp.ndarray | None = None):
+        if self._star is not None:
+            center, arms = self._star
+            out = apply_taps_star(x, center, arms, self.ndim)
+        else:
+            out = apply_taps_generic(x, self.taps, self.ndim)
+        return out if mask is None else out * mask
+
+    def chain(self, x: jnp.ndarray, t: int,
+              mask: jnp.ndarray | None = None) -> jnp.ndarray:
+        """``t`` fused steps, intermediates carried as pure values."""
+        for _ in range(t):
+            x = self.step(x, mask)
+        return x
+
+    # ------------------------------------------------- 3-D streaming ----
+    def window_step(self, window: jnp.ndarray, batch: int,
+                    mask: jnp.ndarray | None = None) -> jnp.ndarray:
+        """Advance one temporal step over a plane window (3-D only).
+
+        ``window`` is ``(B + 2·rad, Y, X)`` planes of time ``s``; the
+        result is the ``B`` planes of time ``s+1`` they determine
+        (*valid* along z — no zero-fill; the caller's shifting buffers
+        provide the z context).  In-plane shifts are zero-filled.  Every
+        z-slice offset is static, so each dz group is one vectorized 2-D
+        application over a ``(B, Y, X)`` block.
+        """
+        assert self.groups is not None, "window_step is for 3-D tap sets"
+        rad = self.radius
+        assert window.shape[0] == batch + 2 * rad
+        acc = None
+        for dz, taps2d in self.groups:
+            block = window[rad + dz:rad + dz + batch]
+            if len(taps2d) == 1 and taps2d[0][0] == (0, 0):
+                contrib = block * jnp.asarray(taps2d[0][1], window.dtype)
+            else:
+                star = split_star(taps2d, 2)
+                if star is not None:
+                    contrib = apply_taps_star(block, star[0], star[1], 2)
+                else:
+                    contrib = apply_taps_generic(block, taps2d, 2)
+            acc = contrib if acc is None else acc + contrib
+        return acc if mask is None else acc * mask
+
+
+@functools.lru_cache(maxsize=None)
+def engine_for(taps: Taps, ndim: int) -> TapEngine:
+    """Memoized engine per (taps, ndim) — specs are hashable frozen tuples."""
+    return TapEngine(taps, ndim)

@@ -12,11 +12,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import roofline as rl
-from repro.core.distributed import make_distributed_stencil
 from repro.core.planner import plan
 from repro.core.stencil_spec import TABLE2, get
 from repro.kernels import ops, ref
-from repro.launch.mesh import make_mesh
 from repro.stencils.data import init_domain, reduced_domain
 
 
@@ -28,11 +26,12 @@ def run_single(name: str, *, t: int | None = None, scale: int = 64,
     shape = reduced_domain(spec, scale)
     x = init_domain(spec, shape)
     t0 = time.time()
-    y = ops.ebisu_stencil(x, spec, depth, interpret=True)
+    y = ops.ebisu_stencil(x, spec, depth, plan=pl, interpret=True)
     y.block_until_ready()
     dt = time.time() - t0
     line = (f"[stencil] {name:11s} domain={shape} t={depth} "
-            f"plan(t={pl.t}, tile={pl.block}, ring={pl.ring}) "
+            f"plan(t={pl.t}, tile={pl.block}, lazy_batch={pl.lazy_batch}, "
+            f"buffers={pl.parallelism.num_buffers}) "
             f"{dt*1e3:.0f}ms")
     if check:
         want = ref.reference(x, spec, depth)
@@ -45,6 +44,11 @@ def run_single(name: str, *, t: int | None = None, scale: int = 64,
 
 def run_distributed(name: str, *, t_total: int = 4, t_block: int = 2,
                     scale: int = 64):
+    # lazy: the mesh helpers need jax.sharding.AxisType (newer jax); the
+    # single-device path must keep working without it
+    from repro.core.distributed import make_distributed_stencil
+    from repro.launch.mesh import make_mesh
+
     spec = get(name)
     n = len(jax.devices())
     mesh = make_mesh((n,), ("data",))

@@ -56,7 +56,7 @@ def test_ebisu2d_deep_blocking(spec):
 
 
 @pytest.mark.parametrize("spec", SPECS_3D, ids=lambda s: s.name)
-@pytest.mark.parametrize("shape", [(20, 9, 13), (24, 16, 16)])
+@pytest.mark.parametrize("shape", [(20, 9, 13), (24, 16, 16), (17, 7, 11)])
 @pytest.mark.parametrize("t", [1, 3])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_ebisu3d_matches_reference(spec, shape, t, dtype):
@@ -114,3 +114,34 @@ def test_stream_equals_strip_modes():
     for o in outs[1:]:
         np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
                                    atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------------------ planner-chosen depths ----
+# All nine Table-2 specs at the depth (and tile/batch) the §6 planner picks
+# for v5e, on odd / non-multiple domains, through the full plan-wired path.
+
+def _plan_for(spec):
+    from repro.core import roofline as rl
+    from repro.core.planner import plan
+    return plan(spec, rl.TPU_V5E)
+
+
+@pytest.mark.parametrize("mode", ["fused", "scratch"])
+@pytest.mark.parametrize("spec", SPECS_2D, ids=lambda s: s.name)
+def test_ebisu2d_planner_depth(spec, mode):
+    p = _plan_for(spec)
+    x = init_domain(spec, (97, 83))
+    want = ref.reference_unrolled(x, spec, p.t)
+    got = ops.ebisu_stencil(x, spec, p.t, plan=p, mode=mode, interpret=True)
+    err = float(jnp.abs(got - want).max())
+    assert err < 1e-4, (spec.name, p.t, mode, err)
+
+
+@pytest.mark.parametrize("spec", SPECS_3D, ids=lambda s: s.name)
+def test_ebisu3d_planner_depth(spec):
+    p = _plan_for(spec)
+    x = init_domain(spec, (2 * spec.halo(p.t) + 5, 9, 11))
+    want = ref.reference_unrolled(x, spec, p.t)
+    got = ops.ebisu_stencil(x, spec, p.t, plan=p, interpret=True)
+    err = float(jnp.abs(got - want).max())
+    assert err < 1e-4, (spec.name, p.t, err)
