@@ -3,56 +3,85 @@
 derived: modeled HBM-traffic ratio naive/EBISU on v5e — the quantity the
 paper's temporal blocking exists to improve.  Naive runs ``t`` full
 load+store passes over the domain; the blocked kernel runs one pass whose
-loads are inflated only by the halo-exact rim fetch (``(tile + 2·halo)/
-tile`` on the blocked axis), so the real ratio is ``t·a_gm`` over
-``a_gm·(1 + (tile + 2·halo)/tile)/2`` — not the degenerate ``t·a_gm/a_gm``.
+loads are inflated only by the halo-exact rim fetch.  The inflation is
+derived from ``ops.launch_geometry`` — the tile the launch *actually*
+resolves (plan wiring, halo rounding and XY tiling included) — not from
+the plan-less default tile constants.
+
+``sweep/`` rows measure the zero-copy multi-sweep executor against the
+naive driver loop (one ``ebisu_stencil`` call per sweep, re-padding and
+re-dispatching every ``t`` steps) at ``T`` total time steps.
 """
 from __future__ import annotations
 
-from benchmarks.common import time_fn
-from repro.core import roofline as rl
+from benchmarks.common import time_fn, time_pair
 from repro.core.stencil_spec import StencilSpec, get
-from repro.kernels import ops
-from repro.kernels.ops import DEFAULT_BH_2D, DEFAULT_ZC_3D
-from repro.kernels.stencil2d import input_rows_per_strip
-from repro.kernels.stencil3d import input_planes_per_chunk
+from repro.kernels import ops, sweep
 from repro.stencils.data import init_domain
 
 
-def reads_per_elem(spec: StencilSpec, t: int, tile: int) -> float:
-    """Input loads per element per blocked sweep (halo-exact fetching)."""
-    if spec.ndim == 2:
-        fetched, body = input_rows_per_strip(spec, t, tile)
-    else:
-        fetched, body = input_planes_per_chunk(spec, t, tile)
-    return fetched / body
+def reads_per_elem(spec: StencilSpec, t: int, shape: tuple[int, ...],
+                   plan=None) -> float:
+    """Input loads per output element per blocked sweep, halo-exact, for
+    the tile geometry this launch resolves."""
+    g = ops.launch_geometry(spec, t, shape, plan=plan)
+    return g["fetched_cells"] / g["body_cells"]
 
 
-def modeled_traffic_ratio(spec: StencilSpec, t: int, tile: int) -> float:
+def modeled_traffic_ratio(spec: StencilSpec, t: int, shape: tuple[int, ...],
+                          plan=None) -> float:
     """Naive ``t``-step HBM traffic over the blocked kernel's traffic.
 
     a_gm = 2 is one load + one store per cell (§6.2).  Naive pays it every
     step; the blocked sweep pays halo-inflated loads plus stores once.
     """
     naive = t * spec.a_gm
-    blocked = spec.a_gm / 2 * (reads_per_elem(spec, t, tile) + 1)
+    blocked = spec.a_gm / 2 * (reads_per_elem(spec, t, shape, plan) + 1)
     return naive / blocked
+
+
+# Table-2 coverage: star and box, 2-D and 3-D, radius 1 and 2.
+KERNEL_CASES = (("j2d5pt", (256, 256), 6),
+                ("j2d9pt", (192, 192), 4),
+                ("j3d7pt", (32, 24, 32), 4),
+                ("j3d27pt", (24, 16, 24), 2))
+
+SWEEP_CASES = (("j2d5pt", (256, 256), 6, 24),
+               ("j3d7pt", (32, 24, 32), 4, 24))
 
 
 def rows():
     out = []
-    for name, shape, t in (("j2d5pt", (256, 256), 6),
-                           ("j3d7pt", (32, 24, 32), 4)):
+    for name, shape, t in KERNEL_CASES:
         spec = get(name)
         x = init_domain(spec, shape)
-        tile = DEFAULT_BH_2D if spec.ndim == 2 else DEFAULT_ZC_3D
         us_blocked = time_fn(
             lambda: ops.ebisu_stencil(x, spec, t, interpret=True))
         us_naive = time_fn(lambda: ops.naive_stencil(x, spec, t))
-        ratio = modeled_traffic_ratio(spec, t, tile)
+        grid = ops.launch_geometry(spec, t, shape)["grid"]
         out.append((f"kernel/{name}-t{t}", us_blocked,
                     f"naive_us={us_naive:.0f}|"
-                    f"hbm_traffic_ratio={ratio:.2f}x|"
-                    f"reads_per_elem={reads_per_elem(spec, t, tile):.3f}|"
+                    f"hbm_traffic_ratio={modeled_traffic_ratio(spec, t, shape):.2f}x|"
+                    f"reads_per_elem={reads_per_elem(spec, t, shape):.3f}|"
+                    f"grid={'x'.join(map(str, grid))}|"
                     f"note=CPU-interpret-wall-time"))
+
+    for name, shape, t, total in SWEEP_CASES:
+        spec = get(name)
+        x = init_domain(spec, shape)
+
+        def loop():
+            v = x
+            for _ in range(total // t):
+                v = ops.ebisu_stencil(v, spec, t, interpret=True)
+            return v
+
+        us_exec, us_loop = time_pair(
+            lambda: sweep.run_sweeps(x, spec, total, t=t, interpret=True),
+            loop)
+        out.append((f"sweep/{name}-T{total}", us_exec,
+                    f"persweep_loop_us={us_loop:.0f}|"
+                    f"speedup={us_loop / us_exec:.2f}x|"
+                    f"sweeps={len(sweep.sweep_schedule(total, t))}|"
+                    f"note=plan-wired-executor-vs-planless-persweep-calls"))
     return out

@@ -10,9 +10,15 @@ import time
 import jax
 
 
-def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
-    """Median wall-time per call in µs (CPU wall time — the TPU-relevant
-    numbers are the model/dry-run 'derived' column)."""
+def time_fn(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Best wall-time per call in µs (CPU wall time — the TPU-relevant
+    numbers are the model/dry-run 'derived' column).
+
+    Best-of-N rather than median: interpret-mode wall time on a shared
+    CPU is contaminated one-sidedly (scheduler preemption, GC), so the
+    minimum is the stable estimator — medians were observed to swing
+    ±60% between identical runs, which would make the bench-gate
+    regression threshold meaningless."""
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)
@@ -22,8 +28,26 @@ def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
         out = fn(*args)
         jax.block_until_ready(out)
         ts.append(time.perf_counter() - t0)
-    ts.sort()
-    return ts[len(ts) // 2] * 1e6
+    return min(ts) * 1e6
+
+
+def time_pair(fn_a, fn_b, warmup: int = 1, iters: int = 7):
+    """Best wall-time per call in µs for two functions, iterations
+    interleaved A/B so a burst of neighbor-CPU contention degrades both
+    sides alike — use when the *ratio* of the two is the quantity of
+    interest (e.g. executor vs per-sweep loop)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn_a())
+        jax.block_until_ready(fn_b())
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        tb.append(time.perf_counter() - t0)
+    return min(ta) * 1e6, min(tb) * 1e6
 
 
 def emit(rows):

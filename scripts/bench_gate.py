@@ -1,0 +1,71 @@
+#!/usr/bin/env python
+"""Bench regression gate: newest BENCH_kernels.json entry vs the previous.
+
+Fails (exit 1) when any row present in both entries regressed by more
+than ``--max-regress`` (default 15%) in wall time.  New rows (no
+predecessor) and removed rows are reported but never fail the gate —
+the trajectory may legitimately add or drop rows across PRs.
+
+Opt-in from the tier-1 gate:  ``bash scripts/tier1.sh --bench-gate``
+(run ``PYTHONPATH=src python -m benchmarks.run --only kernels`` first to
+append a fresh entry; CPU-interpret wall times are noisy, so the gate is
+advisory rather than part of the default tier-1 bar).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def gate(path: str, max_regress: float) -> int:
+    try:
+        with open(path) as f:
+            entries = json.load(f).get("entries", [])
+    except (OSError, ValueError) as e:
+        print(f"bench-gate: cannot read {path}: {e}")
+        return 1
+    if len(entries) < 2:
+        print(f"bench-gate: {len(entries)} entr{'y' if len(entries) == 1 else 'ies'} "
+              f"in {os.path.basename(path)} — nothing to compare, OK")
+        return 0
+    prev, new = entries[-2], entries[-1]
+    print(f"bench-gate: {prev['rev']} ({prev['timestamp']}) -> "
+          f"{new['rev']} ({new['timestamp']}), "
+          f"max regression {max_regress:.0%}")
+    status = 0
+    for name, row in sorted(prev["rows"].items()):
+        if name not in new["rows"]:
+            print(f"  {name:24s} removed (was {row['us_per_call']:.1f}us)")
+            continue
+        old_us = float(row["us_per_call"])
+        new_us = float(new["rows"][name]["us_per_call"])
+        rel = new_us / old_us - 1.0 if old_us else 0.0
+        verdict = "OK"
+        if rel > max_regress:
+            verdict = "FAIL"
+            status = 1
+        print(f"  {name:24s} {old_us:9.1f}us -> {new_us:9.1f}us "
+              f"({rel:+.1%})  {verdict}")
+    for name in sorted(set(new["rows"]) - set(prev["rows"])):
+        print(f"  {name:24s} new row "
+              f"({float(new['rows'][name]['us_per_call']):.1f}us)")
+    print("bench-gate: " + ("FAIL — wall-time regression beyond threshold"
+                            if status else "OK"))
+    return status
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--file", default=os.path.join(_ROOT, "BENCH_kernels.json"))
+    ap.add_argument("--max-regress", type=float, default=0.15,
+                    help="allowed fractional wall-time growth per row")
+    args = ap.parse_args(argv)
+    return gate(args.file, args.max_regress)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

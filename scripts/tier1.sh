@@ -12,6 +12,14 @@
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
+# Opt-in bench regression gate: `bash scripts/tier1.sh --bench-gate [...]`
+# compares the newest two BENCH_kernels.json entries after the test run.
+BENCH_GATE=0
+if [ "${1:-}" = "--bench-gate" ]; then
+    BENCH_GATE=1
+    shift
+fi
+
 SEED_FAILED=25
 SEED_PASSED=165
 SEED_ERRORS=3
@@ -35,4 +43,9 @@ status=0
 [ "$errors" -gt "$SEED_ERRORS" ] && { echo "tier1: FAIL — more collection errors than seed"; status=1; }
 [ "$passed" -lt "$SEED_PASSED" ] && { echo "tier1: FAIL — fewer passes than seed"; status=1; }
 [ "$status" -eq 0 ] && echo "tier1: OK — no worse than seed"
+
+if [ "$BENCH_GATE" -eq 1 ]; then
+    echo
+    python scripts/bench_gate.py || status=1
+fi
 exit "$status"

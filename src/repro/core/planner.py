@@ -115,6 +115,30 @@ def vmem_required_3d_batched(spec: StencilSpec, t: int, zc: int, batch: int,
     return int((planes + io) * s_cell)
 
 
+def fit_streaming_batch(spec: StencilSpec, t: int, zc: int, ny: int, nx: int,
+                        s_cell: int, num_buffers: int,
+                        budget: float) -> int | None:
+    """Largest streaming batch whose windows + I/O staging fit ``budget``.
+
+    The batch must be a halo-multiple divisor of the ``zc + 2·halo`` span
+    (``multiqueue.choose_batch``); shrinks one halo at a time, ``None``
+    if even a single halo sub-block does not fit.  Shared by the §6
+    planner and the multi-sweep executor so both always budget a launch
+    with the same model (``vmem_required_3d_batched`` at the *haloed*
+    working extents ``ny × nx``)."""
+    from repro.core.multiqueue import choose_batch
+
+    halo = spec.halo(t)
+    span = zc + 2 * halo
+    b = choose_batch(span, halo, zc)
+    while (vmem_required_3d_batched(spec, t, zc, b, ny, nx,
+                                    s_cell, num_buffers) > budget):
+        if b <= halo:
+            return None
+        b = choose_batch(span, halo, b - halo)
+    return b
+
+
 def plan(spec: StencilSpec, hw: rl.HardwareModel,
          domain: tuple[int, ...] | None = None,
          max_t: int = 32) -> EbisuPlan:
@@ -172,11 +196,19 @@ def plan(spec: StencilSpec, hw: rl.HardwareModel,
     min_w = max(8, int(math.ceil(rl.min_tile_width(spec, hw, rst=True))))
     ty, tx = ny, nx
 
+    def _work_xy(ty_c: int, tx_c: int, halo: int) -> tuple[int, int]:
+        """In-plane extents the kernel actually allocates/fetches: tiled
+        axes carry their fetched halo (``tile + 2·halo``); untiled axes
+        are the bare domain extent."""
+        return (ty_c + 2 * halo if ty_c < ny else ty_c,
+                tx_c + 2 * halo if tx_c < nx else tx_c)
+
     def _floor_footprint(ty_c: int, tx_c: int, nbuf: int = 2) -> int:
         """Smallest possible launch (t=1, minimal batch) at this xy tile."""
         halo1 = spec.radius
         zc1 = -(-max(16, 4 * halo1) // halo1) * halo1
-        return vmem_required_3d_batched(spec, 1, zc1, halo1, ty_c, tx_c,
+        ey, ex = _work_xy(ty_c, tx_c, halo1)
+        return vmem_required_3d_batched(spec, 1, zc1, halo1, ey, ex,
                                         hw.s_cell, nbuf)
 
     while _floor_footprint(ty, tx) > budget and max(ty, tx) > min_w:
@@ -195,48 +227,51 @@ def plan(spec: StencilSpec, hw: rl.HardwareModel,
 
     # §5-model-driven choice of (t, zc, lazy_batch): maximize PP subject to
     # capacity, budgeting the batched shifting windows the kernel allocates.
-    from repro.core.multiqueue import choose_batch
+    def _snap_xy(t_c: int) -> tuple[int, int]:
+        """Round the capacity-driven xy tile to what the kernel can launch:
+        a halo(t_c) multiple (block-aligned rim sub-blocks, DESIGN.md §8.4).
+        A tile that rounds up to the full extent means the axis is untiled."""
+        if (ty, tx) == (ny, nx):
+            return ny, nx
+        h = spec.halo(t_c)
+        return (min(ny, -(-max(ty, h) // h) * h),
+                min(nx, -(-max(tx, h) // h) * h))
 
-    def _fit_batch(t_c: int, zc_c: int) -> int | None:
-        """Largest streaming batch whose windows + I/O staging fit."""
-        halo = spec.halo(t_c)
-        span = zc_c + 2 * halo
-        b = choose_batch(span, halo, zc_c)
-        while (vmem_required_3d_batched(spec, t_c, zc_c, b, ty, tx,
-                                        hw.s_cell, par.num_buffers) > budget):
-            if b <= halo:
-                return None
-            b = choose_batch(span, halo, b - halo)
-        return b
+    def _fit_batch(t_c: int, zc_c: int, ty_c: int, tx_c: int) -> int | None:
+        ey, ex = _work_xy(ty_c, tx_c, spec.halo(t_c))
+        return fit_streaming_batch(spec, t_c, zc_c, ey, ex, hw.s_cell,
+                                   par.num_buffers, budget)
 
     best = None
     for t_c in range(1, max_t + 1):
         halo = spec.halo(t_c)
         # keep z-overlap V >= 2/3; rounded so halo sub-blocks tile the chunk
         zc_c = -(-max(16, 4 * halo) // halo) * halo
-        b = _fit_batch(t_c, zc_c)
+        ty_c, tx_c = _snap_xy(t_c)
+        b = _fit_batch(t_c, zc_c, ty_c, tx_c)
         if b is None:
             break
         v = zc_c / (zc_c + 2 * halo)
-        if (ty, tx) != (ny, nx):             # xy redundancy when tiled (Eq 9)
-            v = max(0.01, v * rl.v_smtile(spec, t_c, (ty, tx)))
-        v *= rl.v_dtile(_tile_time(spec, t_c, hw, zc_c * ty * tx), hw, 1)
+        if (ty_c, tx_c) != (ny, nx):         # xy redundancy when tiled (Eq 9)
+            v = max(0.01, v * rl.v_smtile(spec, t_c, (ty_c, tx_c)))
+        v *= rl.v_dtile(_tile_time(spec, t_c, hw, zc_c * ty_c * tx_c), hw, 1)
         cand = rl.attainable(spec, t_c, hw, rst=True, v=v,
                              d_all=math.prod(domain))
-        if best is None or cand.pp_cells_per_s > best[3].pp_cells_per_s:
-            best = (t_c, zc_c, b, cand)
+        if best is None or cand.pp_cells_per_s > best[4].pp_cells_per_s:
+            best = (t_c, zc_c, b, (ty_c, tx_c), cand)
     if best is None:
         raise ValueError(
             f"{spec.name}: on-chip budget {budget:.0f}B on {hw.name} cannot "
             f"fit even a t=1 launch at xy tile ({ty}, {tx}) — no feasible "
             f"EBISU plan")
-    t, zc, lazy, res = best
+    t, zc, lazy, (ty, tx), res = best
+    ey, ex = _work_xy(ty, tx, spec.halo(t))
     return EbisuPlan(spec.name, hw.name, "device", t, (zc, ty, tx),
                      spec.halo(t), next_pow2(2 * rad + 2),
                      "shifting" if hw.name.startswith("a100") else "computing",
                      lazy_batch=lazy, parallelism=par,
                      vmem_bytes=vmem_required_3d_batched(
-                         spec, t, zc, lazy, ty, tx, hw.s_cell,
+                         spec, t, zc, lazy, ey, ex, hw.s_cell,
                          par.num_buffers),
                      pp=res)
 

@@ -18,11 +18,13 @@ from repro.core.planner import EbisuPlan, plan as make_plan
 from repro.core.roofline import TPU_V5E
 from repro.core.stencil_spec import StencilSpec, lift_2d_to_3d
 from repro.kernels import ref as ref_ops
-from repro.kernels.stencil2d import ebisu2d
-from repro.kernels.stencil3d import ebisu3d
+from repro.kernels.stencil2d import (ebisu2d, padded_shape_2d,
+                                     strip_geometry)
+from repro.kernels.stencil3d import ebisu3d, launch_geometry_3d
 
 
-# plan-less fallback tiles (also what bench_kernels models traffic with)
+# plan-less fallback tiles (bench traffic modeling resolves the launched
+# tile via launch_geometry below — these are only the request defaults)
 DEFAULT_BH_2D = 128
 DEFAULT_ZC_3D = 16
 DEFAULT_ZC_STREAM_2D = 64
@@ -43,12 +45,14 @@ def ebisu_stencil(x: jnp.ndarray, spec: StencilSpec, t: int, *,
     if spec.ndim == 2:
         if mode == "stream":
             # the paper's 2-D scheme: stream y through the multi-queue
-            # (no overlapped halo along the streamed dim)
+            # (no overlapped halo along the streamed dim); the planner's
+            # §6.4 tile width (plan.block[1]) tiles x with overlapped halo
             zc = (plan.block[0] if plan is not None
                   else max(DEFAULT_ZC_STREAM_2D, spec.halo(t)))
             zc = max(zc, spec.halo(t))
+            tx = plan.block[1] if plan is not None else None
             y = ebisu3d(x[:, None, :], lift_2d_to_3d(spec), t, zc=zc,
-                        lazy_batch=lazy, num_buffers=nbuf,
+                        tx=tx, lazy_batch=lazy, num_buffers=nbuf,
                         interpret=interpret)
             return y[:, 0, :]
         bh = (plan.block[0] if plan is not None
@@ -59,8 +63,43 @@ def ebisu_stencil(x: jnp.ndarray, spec: StencilSpec, t: int, *,
     zc = (plan.block[0] if plan is not None
           else max(DEFAULT_ZC_3D, spec.halo(t)))
     zc = max(zc, spec.halo(t))
-    return ebisu3d(x, spec, t, zc=zc, lazy_batch=lazy, num_buffers=nbuf,
-                   interpret=interpret)
+    ty = plan.block[1] if plan is not None else None
+    tx = plan.block[2] if plan is not None else None
+    return ebisu3d(x, spec, t, zc=zc, ty=ty, tx=tx, lazy_batch=lazy,
+                   num_buffers=nbuf, interpret=interpret)
+
+
+def launch_geometry(spec: StencilSpec, t: int, shape: tuple[int, ...], *,
+                    plan: EbisuPlan | None = None,
+                    mode: str = "fused") -> dict:
+    """The geometry an ``ebisu_stencil`` call with these args will launch.
+
+    Resolves the same tile/grid the kernels resolve (rounding included),
+    so modeled traffic is derived from the launch that actually runs —
+    not from the plan-less default tile (``fetched_cells``/``body_cells``
+    are the halo-exact input cells and output cells per grid step).
+    """
+    halo = spec.halo(t)
+    if spec.ndim == 2 and mode != "stream":
+        bh = plan.block[0] if plan is not None else max(DEFAULT_BH_2D, halo)
+        bh, halo = strip_geometry(spec, t, max(bh, halo))
+        hp, wp = padded_shape_2d(spec, t, bh, *shape)
+        return dict(grid=(hp // bh,), block=(bh, shape[1]), halo=halo,
+                    padded=(hp, wp),
+                    fetched_cells=(bh + 2 * halo) * wp,
+                    body_cells=bh * wp)
+    if spec.ndim == 2:                   # stream mode: lifted 3-D geometry
+        zc = plan.block[0] if plan is not None else \
+            max(DEFAULT_ZC_STREAM_2D, halo)
+        tx = plan.block[1] if plan is not None else None
+        return launch_geometry_3d(lift_2d_to_3d(spec), t,
+                                  (shape[0], 1, shape[1]),
+                                  zc=max(zc, halo), tx=tx)
+    zc = plan.block[0] if plan is not None else max(DEFAULT_ZC_3D, halo)
+    return launch_geometry_3d(
+        spec, t, shape, zc=max(zc, halo),
+        ty=plan.block[1] if plan is not None else None,
+        tx=plan.block[2] if plan is not None else None)
 
 
 def ebisu_stencil_planned(x: jnp.ndarray, spec: StencilSpec, *,

@@ -20,7 +20,13 @@ TPU mapping of the paper's 2-D scheme (§4.1, §6.3.1, §6.4.1):
     per step (DESIGN.md §8.1-2).
   * ``mode='fused'`` chains the ``t`` steps as pure jnp values — Mosaic
     keeps intermediates in VREGs/VMEM without explicit round-trips: the
-    TPU realization of *redundant register streaming* (§4.3.3).
+    TPU realization of *redundant register streaming* (§4.3.3).  The
+    chain is **trapezoid-narrowed** (AN5D-style): step ``s`` computes
+    only the ``sh − 2·s·rad`` rows that can still influence the strip's
+    output, using true neighbor context (valid-mode rows), and the
+    Dirichlet row mask is re-pinned per step only when the strip
+    actually meets the domain boundary — interior strips run mask-free
+    (DESIGN.md §9.1).
   * ``mode='scratch'`` ping-pongs two explicit VMEM scratch buffers — the
     paper's double-buffering, i.e. lazy streaming with a single queue
     (§4.3.2); kept for the Fig-9-style ablation.
@@ -51,6 +57,7 @@ def _strip_kernel(top_ref, mid_ref, bot_ref, out_ref, *scratch,
     sh = bh + 2 * halo
     wp = mid_ref.shape[1]
     engine = engine_for(taps, 2)
+    rad = engine.radius
 
     # --- one-time Dirichlet boundary mask (DESIGN.md §8.2).  Columns need no
     # mask: the strip is cropped to the true domain width, so the zero-fill
@@ -65,12 +72,29 @@ def _strip_kernel(top_ref, mid_ref, bot_ref, out_ref, *scratch,
         [top_ref[...], mid_ref[...], bot_ref[...]], axis=0
     )[:, :width].astype(jnp.float32) * mask
 
-    def emit(final: jnp.ndarray) -> None:
-        body = jnp.pad(final[halo:halo + bh, :], ((0, 0), (0, wp - width)))
-        out_ref[...] = body.astype(out_ref.dtype)
+    def emit(body: jnp.ndarray) -> None:
+        out_ref[...] = jnp.pad(body, ((0, 0), (0, wp - width))
+                               ).astype(out_ref.dtype)
 
     if mode == "fused":
-        emit(engine.chain(vals, t, mask))
+        # Trapezoid narrowing (DESIGN.md §9.1): step s computes only rows
+        # [s·rad, sh − s·rad) in valid mode; after t steps exactly the bh
+        # body rows remain.  The Dirichlet row boundary is re-pinned per
+        # step only on strips that meet it — interior strips (the whole
+        # haloed extent inside [0, height)) run mask-free.
+        interior = (row0 >= 0) & (row0 + sh <= height)
+
+        def repin(v: jnp.ndarray, s: int) -> jnp.ndarray:
+            n = sh - 2 * s * rad
+
+            def masked(u):
+                rr = (jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)
+                      + row0 + s * rad)
+                return u * ((rr >= 0) & (rr < height)).astype(u.dtype)
+
+            return jax.lax.cond(interior, lambda u: u, masked, v)
+
+        emit(engine.chain_trapezoid(vals, t, axes=(0,), post=repin))
         return
 
     # --- 'scratch': explicit VMEM double-buffering (paper's lazy streaming /
@@ -80,7 +104,8 @@ def _strip_kernel(top_ref, mid_ref, bot_ref, out_ref, *scratch,
     for s in range(t):
         src, dst = (buf0, buf1) if s % 2 == 0 else (buf1, buf0)
         dst[...] = engine.step(src[...], mask)
-    emit(buf1[...] if t % 2 == 1 else buf0[...])
+    final = buf1[...] if t % 2 == 1 else buf0[...]
+    emit(final[halo:halo + bh, :])
 
 
 def _pad_to(n: int, m: int) -> int:
@@ -109,22 +134,32 @@ def input_rows_per_strip(spec: StencilSpec, t: int, bh: int) -> tuple[int, int]:
     return bh + 2 * halo, bh
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "t", "bh", "mode",
-                                             "num_buffers", "interpret"))
-def ebisu2d(x: jnp.ndarray, spec: StencilSpec, t: int, *, bh: int = 128,
-            mode: str = "fused", num_buffers: int | None = None,
-            interpret: bool = True) -> jnp.ndarray:
-    """Apply ``t`` temporally-blocked steps of ``spec`` to a 2-D field."""
+def padded_shape_2d(spec: StencilSpec, t: int, bh: int,
+                    height: int, width: int) -> tuple[int, int]:
+    """Padded layout a 2-D launch uses: rows to a strip multiple, cols to 128."""
+    bh, _ = strip_geometry(spec, t, bh)
+    return _pad_to(height, bh), _pad_to(width, 128)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "t", "height", "width",
+                                             "bh", "mode", "num_buffers",
+                                             "interpret"))
+def ebisu2d_padded(xp: jnp.ndarray, spec: StencilSpec, t: int, *,
+                   height: int, width: int, bh: int = 128,
+                   mode: str = "fused", num_buffers: int | None = None,
+                   interpret: bool = True) -> jnp.ndarray:
+    """Padded-layout sweep: ``xp`` is ``(hp, wp)`` with zeros outside the
+    ``height × width`` domain at the origin; returns the same layout
+    (out-of-domain cells again zero — DESIGN.md §9.3).  This is the
+    multi-sweep executor's hot path: chaining sweeps through it pays no
+    per-sweep pad/crop."""
     assert spec.ndim == 2
-    height, width = x.shape
     bh, halo = strip_geometry(spec, t, bh)
     sh = bh + 2 * halo
     k = bh // halo                      # halo sub-blocks per strip body
 
-    hp = _pad_to(height, bh)
-    wp = _pad_to(width, 128)
-    xp = jnp.zeros((hp, wp), jnp.float32).at[:height, :width].set(
-        x.astype(jnp.float32))
+    hp, wp = xp.shape
+    assert hp % bh == 0 and wp % 128 == 0, (xp.shape, bh)
     grid = hp // bh
     nsub = hp // halo
 
@@ -162,16 +197,32 @@ def ebisu2d(x: jnp.ndarray, spec: StencilSpec, t: int, *, bh: int = 128,
         params["compiler_params"] = pltpu.TPUCompilerParams(
             dimension_semantics=("parallel",), vmem_limit_bytes=limit)
 
-    out = pl.pallas_call(
+    return pl.pallas_call(
         kern,
         grid=(grid,),
         in_specs=[pl.BlockSpec((halo, wp), idx_top),
                   pl.BlockSpec((bh, wp), idx_mid),
                   pl.BlockSpec((halo, wp), idx_bot)],
         out_specs=pl.BlockSpec((bh, wp), idx_mid),
-        out_shape=jax.ShapeDtypeStruct((hp, wp), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((hp, wp), xp.dtype),
         scratch_shapes=scratch_shapes,
         interpret=interpret,
         **params,
     )(xp, xp, xp)
-    return out[:height, :width]
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "t", "bh", "mode",
+                                             "num_buffers", "interpret"))
+def ebisu2d(x: jnp.ndarray, spec: StencilSpec, t: int, *, bh: int = 128,
+            mode: str = "fused", num_buffers: int | None = None,
+            interpret: bool = True) -> jnp.ndarray:
+    """Apply ``t`` temporally-blocked steps of ``spec`` to a 2-D field."""
+    assert spec.ndim == 2
+    height, width = x.shape
+    hp, wp = padded_shape_2d(spec, t, bh, height, width)
+    xp = jnp.zeros((hp, wp), jnp.float32).at[:height, :width].set(
+        x.astype(jnp.float32))
+    out = ebisu2d_padded(xp, spec, t, height=height, width=width, bh=bh,
+                         mode=mode, num_buffers=num_buffers,
+                         interpret=interpret)
+    return out[:height, :width].astype(x.dtype)

@@ -4,20 +4,33 @@ This is the paper's Fig. 5/6 scheme on the TPU memory hierarchy, with the
 §6 planner's decisions wired all the way in:
 
   * Each Pallas grid step is a *device tile*: a chunk of ``zc`` output
-    planes.  **Halo-exact fetching**: the chunk's z-context comes from one
-    ``halo``-plane sub-block on each side (``HALO = t·rad``) selected by
-    halo-granular BlockSpecs — input traffic per grid step is
-    ``zc + 2·halo`` planes, not the ``3·zc`` of whole neighbor chunks
-    (DESIGN.md §8.4).  ``zc`` is rounded up to a multiple of ``halo`` so
-    the rim sub-blocks are block-aligned.
+    planes × a ``(ty, tx)`` in-plane tile (``plan.block``).  The grid is
+    ``(gz, gy, gx)`` — the planner's §6.4 deeper-or-wider choice is
+    executed, not decorative: large domains run at planner-chosen XY
+    tiles instead of whatever pads into VMEM.
+  * **Halo-exact fetching on every blocked axis**: the tile's context
+    comes from one ``halo``-deep sub-block per side, selected by
+    halo-granular BlockSpecs (``HALO = t·rad``) — input traffic per grid
+    step is ``(zc + 2·halo) × (ty + 2·halo) × (tx + 2·halo)`` cells, not
+    whole neighbor blocks.  Each tiled axis is rounded up to a multiple
+    of ``halo`` so its rim sub-blocks are block-aligned (DESIGN.md §8.4,
+    §9.2).  An axis whose tile covers the whole domain stays *untiled*:
+    no rim views, and the zero-fill slicing edge is its Dirichlet
+    boundary for free (DESIGN.md §8.2).
   * Inside the kernel, planes stream through a **multi-queue**: one
     sliding window of ``W = B + 2·rad`` planes per temporal step, held in
-    VMEM scratch.  This is the paper's *shifting* addressing mode
-    (§4.2.2) batched by ``B = lazy_batch`` planes: per pipeline stage the
-    window shifts by ``B`` and one *batched* vectorized tap application
+    VMEM scratch (padded to (8, 128) lane alignment).  This is the
+    paper's *shifting* addressing mode (§4.2.2) batched by
+    ``B = lazy_batch`` planes: per pipeline stage the window shifts by
+    ``B`` and one *batched* vectorized tap application
     (``taps.TapEngine.window_step``) advances ``B`` planes of a temporal
     step at once — lazy streaming with honest batch granularity instead
     of a plane-at-a-time ``fori_loop``.
+  * On tiled in-plane axes the cascade is **trapezoid-narrowed**
+    (DESIGN.md §9.1): the time-``s`` planes carry only the
+    ``tile + 2·(t−s)·rad`` live extent, computed in valid mode from the
+    fetched halo — per-step in-plane FLOPs shrink with depth instead of
+    recomputing the full haloed tile every step.
   * When input planes ``[z, z+B)`` (time 0) are enqueued, planes
     ``[z - s·rad, z+B - s·rad)`` of time ``s`` become computable —
     dequeue of step ``s`` overlaps enqueue of step ``s+1`` ("seamless
@@ -30,10 +43,11 @@ This is the paper's Fig. 5/6 scheme on the TPU memory hierarchy, with the
 
 Boundary semantics: zero outside the domain at every step.  The domain
 sits at ``[0, zdim) × [0, ydim) × [0, xdim)`` of the padded array; the
-per-batch {0,1} mask (global-z validity × in-plane validity) is applied
-as one multiply per batched tap application (DESIGN.md §8.1-2).  Queue
-windows are zero-initialized so strip planes below the chunk read as the
-tap engine's zero-fill — garbage in the out-of-strip "error zone" decays
+per-batch {0,1} validity factors (global-z × global-y × global-x, the
+latter two only on tiled axes) are applied as broadcast multiplies per
+batched tap application (DESIGN.md §8.1-2, §9.2).  Queue windows are
+zero-initialized so strip planes below the chunk read as the tap
+engine's zero-fill — garbage in the out-of-strip "error zone" decays
 before it can reach an output plane (DESIGN.md §8.3).
 """
 from __future__ import annotations
@@ -65,140 +79,297 @@ def chunk_geometry(spec: StencilSpec, t: int, zc: int) -> tuple[int, int]:
     return _pad_to(zc, halo), halo
 
 
+def xy_tile(spec: StencilSpec, t: int, dim: int,
+            tile: int | None) -> tuple[int, bool]:
+    """Resolve a requested in-plane tile: (extent, tiled?).
+
+    ``None`` (or a tile that covers the domain once rounded to a halo
+    multiple) means the axis is untiled — full extent, no rim views.
+    """
+    if tile is None:
+        return dim, False
+    halo = spec.halo(t)
+    tile = _pad_to(max(tile, halo), halo)
+    if tile >= dim:
+        return dim, False
+    return tile, True
+
+
 def input_planes_per_chunk(spec: StencilSpec, t: int, zc: int) -> tuple[int, int]:
     """Modeled input traffic: (planes fetched per chunk, chunk body planes)."""
     zc, halo = chunk_geometry(spec, t, zc)
     return zc + 2 * halo, zc
 
 
-def _stream_kernel(top_ref, mid_ref, bot_ref, out_ref, buf, *,
-                   taps, t: int, rad: int, zc: int, halo: int, batch: int,
-                   zdim: int, ydim: int, xdim: int):
-    i = pl.program_id(0)
+def launch_geometry_3d(spec: StencilSpec, t: int, shape: tuple[int, int, int],
+                       *, zc: int = 16, ty: int | None = None,
+                       tx: int | None = None) -> dict:
+    """The geometry a 3-D launch will actually execute (no tracing).
+
+    Returns grid, per-grid-step block, halo, per-axis tiled flags, the
+    padded array shape, and the halo-exact fetched/body cell counts per
+    grid step — the quantities the bench's traffic model and the
+    planner-honoring tests consume.
+    """
+    zdim, ydim, xdim = shape
+    zc, halo = chunk_geometry(spec, t, zc)
+    ty_r, tiled_y = xy_tile(spec, t, ydim, ty)
+    tx_r, tiled_x = xy_tile(spec, t, xdim, tx)
+    zp = _pad_to(zdim, zc)
+    yp = _pad_to(ydim, ty_r) if tiled_y else _pad_to(ydim, 8)
+    xp = _pad_to(xdim, tx_r) if tiled_x else _pad_to(xdim, 128)
+    grid = (zp // zc,
+            yp // ty_r if tiled_y else 1,
+            xp // tx_r if tiled_x else 1)
+    sy = ty_r + 2 * halo if tiled_y else ydim
+    sx = tx_r + 2 * halo if tiled_x else xdim
+    fetched = (zc + 2 * halo) * sy * sx
+    body = zc * ty_r * tx_r
+    return dict(grid=grid, block=(zc, ty_r, tx_r), halo=halo,
+                tiled=(True, tiled_y, tiled_x), padded=(zp, yp, xp),
+                fetched_cells=fetched, body_cells=body)
+
+
+def _stream_kernel(*args, taps, t: int, rad: int, zc: int, halo: int,
+                   batch: int, zdim: int, ydim: int, xdim: int,
+                   ty: int, tx: int, nyk: int, nxk: int):
+    refs, out_ref, buf = args[:-2], args[-2], args[-1]
+    iz, iy, ix = pl.program_id(0), pl.program_id(1), pl.program_id(2)
     engine = engine_for(taps, 3)
-    yp, xp = mid_ref.shape[1], mid_ref.shape[2]
-    sz = zc + 2 * halo
+    tiled_y, tiled_x = nyk == 3, nxk == 3
     kz = zc // halo
+    sz = zc + 2 * halo
+    sy = ty + 2 * halo if tiled_y else ydim
+    sx = tx + 2 * halo if tiled_x else xdim
+    cy = rad if tiled_y else 0          # per-step in-plane narrowing
+    cx = rad if tiled_x else 0
     w = batch + 2 * rad
-    z_base = i * zc - halo               # global z of strip plane 0
+    z_base = iz * zc - halo             # global z of strip plane 0
+    y_base = iy * ty - halo if tiled_y else 0
+    x_base = ix * tx - halo if tiled_x else 0
+    by, bx = out_ref.shape[1], out_ref.shape[2]
 
-    def zmask(p0: int, n: int) -> jnp.ndarray:
-        """Global-z Dirichlet validity of strip planes [p0, p0+n)."""
+    def view(zi: int, yi: int, xi: int):
+        return refs[(zi * nyk + yi) * nxk + xi]
+
+    def ey(s: int) -> int:              # live y extent of time-s planes
+        return sy - 2 * s * cy
+
+    def ex(s: int) -> int:
+        return sx - 2 * s * cx
+
+    def apply_masks(planes: jnp.ndarray, p0: int, s: int) -> jnp.ndarray:
+        """Dirichlet validity of time-s strip planes [p0, p0+n): global-z
+        always (the z boundary moves with the grid step), global-y/x only
+        on tiled axes (untiled axes are domain-cropped — their zero-fill
+        edge is the boundary)."""
+        n = planes.shape[0]
         zg = z_base + p0 + jax.lax.broadcasted_iota(jnp.int32, (n, 1, 1), 0)
-        return ((zg >= 0) & (zg < zdim)).astype(jnp.float32)
+        planes = planes * ((zg >= 0) & (zg < zdim)).astype(jnp.float32)
+        if tiled_y:
+            yg = (y_base + s * rad
+                  + jax.lax.broadcasted_iota(jnp.int32, (1, ey(s), 1), 1))
+            planes = planes * ((yg >= 0) & (yg < ydim)).astype(jnp.float32)
+        if tiled_x:
+            xg = (x_base + s * rad
+                  + jax.lax.broadcasted_iota(jnp.int32, (1, 1, ex(s)), 2))
+            planes = planes * ((xg >= 0) & (xg < xdim)).astype(jnp.float32)
+        return planes
 
-    # The pipeline computes on planes cropped to the true domain extent:
-    # the y/x pad lanes exist only for TPU tile alignment, and cropping
-    # makes the zero-fill slicing edge coincide with the in-plane Dirichlet
-    # boundary — no y/x mask at all (DESIGN.md §8.2).  Only the z boundary
-    # stays a per-batch mask (it moves with the grid step).
-    def crop(planes: jnp.ndarray) -> jnp.ndarray:
-        return planes[:, :ydim, :xdim]
+    def slab(j_sub: int) -> jnp.ndarray:
+        """Halo sub-block ``j_sub`` of the haloed z extent, assembled
+        in-plane from the per-axis rim/body views and cropped to the
+        tile's working extent."""
+        if j_sub == 0:
+            zi, zsl = 0, slice(None)
+        elif j_sub <= kz:
+            zi, zsl = 1, slice((j_sub - 1) * halo, j_sub * halo)
+        else:
+            zi, zsl = 2, slice(None)
+        rows = []
+        for yi in range(nyk):
+            cells = [view(zi, yi, xi)[zsl] for xi in range(nxk)]
+            rows.append(cells[0] if nxk == 1
+                        else jnp.concatenate(cells, axis=2))
+        plane = rows[0] if nyk == 1 else jnp.concatenate(rows, axis=1)
+        return plane[:, :sy, :sx]
 
     # Queue windows are per-grid-step state.  Only the tail-source slice
     # [batch, w) must be zeroed: the first shift of each queue copies it to
     # the window head, where it stands in for the planes below the strip —
     # the zero-fill edge (DESIGN.md §8.3); the rest is overwritten before
     # it is ever read.
-    buf[:, batch:w] = jnp.zeros((t, w - batch, ydim, xdim), jnp.float32)
+    buf[:, batch:w] = jnp.zeros((t, w - batch) + buf.shape[2:], jnp.float32)
 
     def advance(queue: int, planes: jnp.ndarray) -> None:
-        """Shift queue's window by one batch (paper's 'shifting' mode)."""
-        tail = buf[queue, batch:w]
-        buf[queue, 0:2 * rad] = tail
-        buf[queue, 2 * rad:w] = planes
+        """Shift queue's window by one batch (paper's 'shifting' mode).
+        Queue ``q`` holds time-``q`` planes at their narrowed extent, in
+        the scratch buffer's aligned corner."""
+        ny, nx = ey(queue), ex(queue)
+        tail = buf[queue, batch:w, :ny, :nx]
+        buf[queue, 0:2 * rad, :ny, :nx] = tail
+        buf[queue, 2 * rad:w, :ny, :nx] = planes
 
     for n in range(sz // batch):
         z0 = n * batch
         # ---- batched enqueue of input planes [z0, z0+batch) into queue 0.
-        # A batch is whole halo-sub-blocks, each living in exactly one of
-        # the three halo-exact views.
-        chunks = []
-        for j in range(z0 // halo, (z0 + batch) // halo):
-            if j == 0:
-                chunks.append(top_ref[...])
-            elif j <= kz:
-                chunks.append(mid_ref[(j - 1) * halo:j * halo])
-            else:
-                chunks.append(bot_ref[...])
-        newp = (crop(jnp.concatenate(chunks, axis=0)).astype(jnp.float32)
-                * zmask(z0, batch))
-        advance(0, newp)
+        # A batch is whole halo-sub-blocks, each living in exactly one
+        # z-view; in-plane each sub-block is one rim/body/rim concat.
+        chunks = [slab(j) for j in range(z0 // halo, (z0 + batch) // halo)]
+        newp = (chunks[0] if len(chunks) == 1
+                else jnp.concatenate(chunks, axis=0)).astype(jnp.float32)
+        advance(0, apply_masks(newp, z0, 0))
 
         # ---- cascade: one batched tap application per temporal step -----
         for s in range(1, t + 1):
             p0 = z0 - s * rad            # first plane this step produces
-            window = buf[s - 1][...]     # (w, ydim, xdim), already advanced
-            planes = engine.window_step(window, batch, mask=zmask(p0, batch))
+            window = buf[s - 1, :, :ey(s - 1), :ex(s - 1)]
+            planes = engine.window_step(window, batch,
+                                        inplane_crops=(cy, cx))
+            planes = apply_masks(planes, p0, s)
             if s < t:
                 advance(s, planes)
             else:
                 lo, hi = max(p0, halo), min(p0 + batch, halo + zc)
                 if lo < hi:
                     body = planes[lo - p0:hi - p0]
-                    body = jnp.pad(body, ((0, 0), (0, yp - ydim),
-                                          (0, xp - xdim)))
+                    body = jnp.pad(body, ((0, 0), (0, by - ey(t)),
+                                          (0, bx - ex(t))))
                     out_ref[lo - halo:hi - halo] = body.astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "t", "zc", "lazy_batch",
-                                             "num_buffers", "interpret"))
-def ebisu3d(x: jnp.ndarray, spec: StencilSpec, t: int, *, zc: int = 16,
-            lazy_batch: int | None = None, num_buffers: int | None = None,
-            interpret: bool = True) -> jnp.ndarray:
-    """Apply ``t`` temporally-blocked steps of a 3-D ``spec`` via z-streaming."""
+def padded_shape_3d(spec: StencilSpec, t: int, shape: tuple[int, int, int],
+                    *, zc: int = 16, ty: int | None = None,
+                    tx: int | None = None) -> tuple[int, int, int]:
+    """Padded layout a 3-D launch uses (see ``launch_geometry_3d``)."""
+    return launch_geometry_3d(spec, t, shape, zc=zc, ty=ty, tx=tx)["padded"]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "spec", "t", "zdim", "ydim", "xdim", "zc", "ty", "tx", "lazy_batch",
+    "num_buffers", "interpret"))
+def ebisu3d_padded(xpad: jnp.ndarray, spec: StencilSpec, t: int, *,
+                   zdim: int, ydim: int, xdim: int, zc: int = 16,
+                   ty: int | None = None, tx: int | None = None,
+                   lazy_batch: int | None = None,
+                   num_buffers: int | None = None,
+                   interpret: bool = True) -> jnp.ndarray:
+    """Padded-layout sweep: ``xpad`` is the ``padded_shape_3d`` layout with
+    zeros outside the domain at the origin; returns the same layout
+    (out-of-domain cells again zero — DESIGN.md §9.3)."""
     assert spec.ndim == 3
-    zdim, ydim, xdim = x.shape
     rad = spec.radius
     zc, halo = chunk_geometry(spec, t, zc)
+    ty_r, tiled_y = xy_tile(spec, t, ydim, ty)
+    tx_r, tiled_x = xy_tile(spec, t, xdim, tx)
     kz = zc // halo
     batch, w, _ = stream_schedule(zc, halo, rad,
                                   lazy_batch if lazy_batch else zc)
 
-    zp = _pad_to(zdim, zc)
-    yp = _pad_to(ydim, 8)
-    xp = _pad_to(xdim, 128)
-    xpad = jnp.zeros((zp, yp, xp), jnp.float32).at[
-        :zdim, :ydim, :xdim].set(x.astype(jnp.float32))
-    grid = zp // zc
-    nsub = zp // halo
+    zp, yp, xp = xpad.shape
+    assert (zp, yp, xp) == padded_shape_3d(spec, t, (zdim, ydim, xdim),
+                                           zc=zc, ty=ty, tx=tx), xpad.shape
+    grid = (zp // zc,
+            yp // ty_r if tiled_y else 1,
+            xp // tx_r if tiled_x else 1)
+    nsub_z, nsub_y, nsub_x = zp // halo, yp // halo if tiled_y else 1, \
+        xp // halo if tiled_x else 1
 
-    def idx_top(i):
-        return (jnp.maximum(i * kz - 1, 0), 0, 0)
+    # Per-axis view kinds: rim sub-block before the body, the body, rim
+    # after.  Clamped rim ids at the domain edges deliver in-array data
+    # whose strip-global coordinates are out of domain — zeroed by the
+    # validity masks (DESIGN.md §8.4).
+    def z_idx(kind):
+        return {"top": lambda i: jnp.maximum(i * kz - 1, 0),
+                "mid": lambda i: i,
+                "bot": lambda i: jnp.minimum((i + 1) * kz, nsub_z - 1)}[kind]
 
-    def idx_mid(i):
-        return (i, 0, 0)
+    def plane_idx(kind, k_blocks, nsub):
+        return {"top": lambda j: jnp.maximum(j * k_blocks - 1, 0),
+                "mid": lambda j: j,
+                "bot": lambda j: jnp.minimum((j + 1) * k_blocks,
+                                             nsub - 1)}[kind]
 
-    def idx_bot(i):
-        return (jnp.minimum((i + 1) * kz, nsub - 1), 0, 0)
+    zkinds = ("top", "mid", "bot")
+    ykinds = ("top", "mid", "bot") if tiled_y else ("mid",)
+    xkinds = ("top", "mid", "bot") if tiled_x else ("mid",)
+    zlen = {"top": halo, "mid": zc, "bot": halo}
+    ylen = {"top": halo, "mid": ty_r if tiled_y else yp, "bot": halo}
+    xlen = {"top": halo, "mid": tx_r if tiled_x else xp, "bot": halo}
+
+    in_specs = []
+    for zk in zkinds:
+        fz = z_idx(zk)
+        for yk in ykinds:
+            fy = (plane_idx(yk, ty_r // halo, nsub_y) if tiled_y
+                  else (lambda j: 0))
+            for xk in xkinds:
+                fx = (plane_idx(xk, tx_r // halo, nsub_x) if tiled_x
+                      else (lambda k: 0))
+                in_specs.append(pl.BlockSpec(
+                    (zlen[zk], ylen[yk], xlen[xk]),
+                    lambda i, j, k, fz=fz, fy=fy, fx=fx:
+                    (fz(i), fy(j), fx(k))))
+
+    out_block = (zc, ty_r if tiled_y else yp, tx_r if tiled_x else xp)
+    out_idx = (lambda i, j, k:
+               (i, j if tiled_y else 0, k if tiled_x else 0))
 
     kern = functools.partial(
         _stream_kernel, taps=spec.taps, t=t, rad=rad, zc=zc, halo=halo,
-        batch=batch, zdim=zdim, ydim=ydim, xdim=xdim)
+        batch=batch, zdim=zdim, ydim=ydim, xdim=xdim, ty=ty_r, tx=tx_r,
+        nyk=len(ykinds), nxk=len(xkinds))
+
+    # VMEM shifting windows, padded to the (8, 128) f32 lane tile when
+    # lowering for real TPU — the unaligned (t, w, ydim, xdim) scratch the
+    # seed allocated only works because interpret mode hides TPU tiling.
+    # The interpreter keeps exact extents: its ref writes are functional
+    # whole-buffer copies, so pad lanes would 4x the per-stage copy cost
+    # for nothing (DESIGN.md §9.2).
+    sy = ty_r + 2 * halo if tiled_y else ydim
+    sx = tx_r + 2 * halo if tiled_x else xdim
+    scr_y, scr_x = (sy, sx) if interpret else (_pad_to(sy, 8),
+                                               _pad_to(sx, 128))
+    scratch = pltpu.VMEM((t, w, scr_y, scr_x), jnp.float32)
 
     params = {}
     if not interpret:
         limit = None
         if num_buffers is not None:
-            scr = t * w * yp * xp * 4
-            io = (zc + 2 * halo + zc) * yp * xp * 4
+            scr = t * w * scr_y * scr_x * 4
+            io = (zc + 2 * halo) * sy * sx * 4 + zc * out_block[1] * \
+                out_block[2] * 4
             limit = min(128 << 20, max(32 << 20,
                                        2 * (scr + num_buffers * io)))
         params["compiler_params"] = pltpu.TPUCompilerParams(
-            dimension_semantics=("parallel",), vmem_limit_bytes=limit)
+            dimension_semantics=("parallel",) * 3, vmem_limit_bytes=limit)
 
-    out = pl.pallas_call(
+    return pl.pallas_call(
         kern,
-        grid=(grid,),
-        in_specs=[
-            pl.BlockSpec((halo, yp, xp), idx_top),
-            pl.BlockSpec((zc, yp, xp), idx_mid),
-            pl.BlockSpec((halo, yp, xp), idx_bot),
-        ],
-        out_specs=pl.BlockSpec((zc, yp, xp), idx_mid),
-        out_shape=jax.ShapeDtypeStruct((zp, yp, xp), x.dtype),
-        scratch_shapes=[pltpu.VMEM((t, w, ydim, xdim), jnp.float32)],
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(out_block, out_idx),
+        out_shape=jax.ShapeDtypeStruct((zp, yp, xp), xpad.dtype),
+        scratch_shapes=[scratch],
         interpret=interpret,
         **params,
-    )(xpad, xpad, xpad)
-    return out[:zdim, :ydim, :xdim]
+    )(*([xpad] * len(in_specs)))
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "t", "zc", "ty", "tx",
+                                             "lazy_batch", "num_buffers",
+                                             "interpret"))
+def ebisu3d(x: jnp.ndarray, spec: StencilSpec, t: int, *, zc: int = 16,
+            ty: int | None = None, tx: int | None = None,
+            lazy_batch: int | None = None, num_buffers: int | None = None,
+            interpret: bool = True) -> jnp.ndarray:
+    """Apply ``t`` temporally-blocked steps of a 3-D ``spec`` via z-streaming."""
+    assert spec.ndim == 3
+    zdim, ydim, xdim = x.shape
+    zp, yp, xp = padded_shape_3d(spec, t, x.shape, zc=zc, ty=ty, tx=tx)
+    xpad = jnp.zeros((zp, yp, xp), jnp.float32).at[
+        :zdim, :ydim, :xdim].set(x.astype(jnp.float32))
+    out = ebisu3d_padded(xpad, spec, t, zdim=zdim, ydim=ydim, xdim=xdim,
+                         zc=zc, ty=ty, tx=tx, lazy_batch=lazy_batch,
+                         num_buffers=num_buffers, interpret=interpret)
+    return out[:zdim, :ydim, :xdim].astype(x.dtype)

@@ -26,6 +26,16 @@ Three application paths:
                 planes, with zero-fill only in-plane.  Every z-slice is
                 static, so the streamer's batched advance is one
                 vectorized call per temporal step.
+
+Every path also supports per-axis **valid-mode** application (``crops``):
+a tap axis with ``crops[a] = c > 0`` is not zero-padded — the output
+shrinks by ``c`` cells on each side and every tap reads true neighbor
+values.  This is the AN5D-style trapezoid: ``chain_trapezoid`` narrows
+the live region by one radius per temporal step, so step ``s`` of a
+``t``-deep chain computes only the cells that can still influence the
+final output (DESIGN.md §9.1) — the FLOP side of temporal blocking
+shrinks with depth instead of recomputing the full haloed strip every
+step.
 """
 from __future__ import annotations
 
@@ -76,22 +86,33 @@ def split_star(taps: Taps, ndim: int):
     return center, arms
 
 
-def apply_taps_generic(x: jnp.ndarray, taps: Taps, ndim: int) -> jnp.ndarray:
+def apply_taps_generic(x: jnp.ndarray, taps: Taps, ndim: int,
+                       crops: Sequence[int] | None = None) -> jnp.ndarray:
     """One stencil application on the last ``ndim`` axes of ``x``.
 
     Pads the tap axes once by the tap radius, then realizes every tap as
     a single static slice of the padded buffer.  Leading axes of ``x``
     (e.g. a batch of planes) broadcast through untouched.
+
+    ``crops[a] = c > 0`` switches tap-axis ``a`` to *valid* mode: no
+    zero-pad, the output shrinks by ``c`` on each side, and every tap
+    (``|off| ≤ c``) reads true neighbor values from ``x`` itself.
     """
     rad = tap_radius(taps)
     lead = x.ndim - ndim
-    pad = [(0, 0)] * lead + [(rad, rad)] * ndim
-    xp = jnp.pad(x, pad)
-    shape = x.shape[lead:]
+    crops = tuple(crops) if crops is not None else (0,) * ndim
+    for a, c in enumerate(crops):
+        # a valid-mode slice with |off| > crop would wrap via a negative
+        # start instead of erroring — refuse it outright
+        assert c == 0 or c >= max(abs(off[a]) for off, _ in taps), (a, c)
+    pad = [(0, 0)] * lead + [(0, 0) if c else (rad, rad) for c in crops]
+    xp = jnp.pad(x, pad) if any(p != (0, 0) for p in pad) else x
+    base = [c if c else rad for c in crops]
+    out_n = [n - 2 * c for n, c in zip(x.shape[lead:], crops)]
     acc = None
     for off, c in taps:
         idx = (Ellipsis,) + tuple(
-            slice(rad + o, rad + o + n) for o, n in zip(off, shape))
+            slice(b + o, b + o + n) for b, o, n in zip(base, off, out_n))
         term = xp[idx] * jnp.asarray(c, x.dtype)
         acc = term if acc is None else acc + term
     return acc
@@ -99,22 +120,41 @@ def apply_taps_generic(x: jnp.ndarray, taps: Taps, ndim: int) -> jnp.ndarray:
 
 def apply_taps_star(x: jnp.ndarray, center: float,
                     arms: Sequence[Sequence[tuple[int, float]]],
-                    ndim: int) -> jnp.ndarray:
-    """Axis-wise (separable-shape) accumulation for star tap sets."""
-    acc = x * jnp.asarray(center, x.dtype)
+                    ndim: int,
+                    crops: Sequence[int] | None = None) -> jnp.ndarray:
+    """Axis-wise (separable-shape) accumulation for star tap sets.
+
+    ``crops`` has the same valid-mode semantics as in
+    ``apply_taps_generic``: cropped axes shrink and read true neighbors.
+    """
     lead = x.ndim - ndim
+    crops = tuple(crops) if crops is not None else (0,) * ndim
+
+    def crop_axes(exclude: int = -1):
+        idx = [slice(None)] * x.ndim
+        for b, cp in enumerate(crops):
+            if cp and b != exclude:
+                idx[lead + b] = slice(cp, x.shape[lead + b] - cp)
+        return idx
+
+    acc = x[tuple(crop_axes())] * jnp.asarray(center, x.dtype)
     for a, axis_arms in enumerate(arms):
         if not axis_arms:
             continue
         axis = lead + a
         rad = max(abs(o) for o, _ in axis_arms)
         n = x.shape[axis]
-        pad = [(0, 0)] * x.ndim
-        pad[axis] = (rad, rad)
-        xp = jnp.pad(x, pad)
+        cp = crops[a]
+        assert cp == 0 or cp >= rad, (a, cp, rad)  # see apply_taps_generic
+        if cp:
+            xp, base, out_a = x, cp, n - 2 * cp
+        else:
+            pad = [(0, 0)] * x.ndim
+            pad[axis] = (rad, rad)
+            xp, base, out_a = jnp.pad(x, pad), rad, n
         for off, c in axis_arms:
-            idx = [slice(None)] * x.ndim
-            idx[axis] = slice(rad + off, rad + off + n)
+            idx = crop_axes(exclude=a)
+            idx[axis] = slice(base + off, base + off + out_a)
             acc = acc + xp[tuple(idx)] * jnp.asarray(c, x.dtype)
     return acc
 
@@ -135,12 +175,13 @@ class TapEngine:
         self._star = split_star(taps, ndim)
         self.groups = group_by_leading(taps) if ndim == 3 else None
 
-    def step(self, x: jnp.ndarray, mask: jnp.ndarray | None = None):
+    def step(self, x: jnp.ndarray, mask: jnp.ndarray | None = None,
+             crops: Sequence[int] | None = None):
         if self._star is not None:
             center, arms = self._star
-            out = apply_taps_star(x, center, arms, self.ndim)
+            out = apply_taps_star(x, center, arms, self.ndim, crops)
         else:
-            out = apply_taps_generic(x, self.taps, self.ndim)
+            out = apply_taps_generic(x, self.taps, self.ndim, crops)
         return out if mask is None else out * mask
 
     def chain(self, x: jnp.ndarray, t: int,
@@ -150,32 +191,68 @@ class TapEngine:
             x = self.step(x, mask)
         return x
 
+    def chain_trapezoid(self, x: jnp.ndarray, t: int,
+                        axes: Sequence[int] = (0,),
+                        post=None) -> jnp.ndarray:
+        """``t`` valid-mode steps, shrinking ``axes`` by one radius each.
+
+        Step ``s`` computes only the ``n − 2·s·rad`` live extent along
+        each narrowed tap axis — the cells whose value can still reach
+        the final output — using true neighbor context instead of a
+        zero-fill edge (DESIGN.md §9.1).  ``post(v, s)`` (optional) is
+        applied after each step; kernels use it to re-pin the Dirichlet
+        domain boundary where the strip actually meets it.
+
+        Interior equivalence: for cells at distance ≥ ``t·rad`` from the
+        narrowed edges, the result equals ``chain(x, t)`` cropped by
+        ``t·rad`` along ``axes`` (boundary effects travel one radius per
+        step, so those cells never see the edge).
+        """
+        crops = tuple(self.radius if a in axes else 0
+                      for a in range(self.ndim))
+        for s in range(1, t + 1):
+            x = self.step(x, crops=crops)
+            if post is not None:
+                x = post(x, s)
+        return x
+
     # ------------------------------------------------- 3-D streaming ----
     def window_step(self, window: jnp.ndarray, batch: int,
-                    mask: jnp.ndarray | None = None) -> jnp.ndarray:
+                    mask: jnp.ndarray | None = None,
+                    inplane_crops: tuple[int, int] = (0, 0)) -> jnp.ndarray:
         """Advance one temporal step over a plane window (3-D only).
 
         ``window`` is ``(B + 2·rad, Y, X)`` planes of time ``s``; the
         result is the ``B`` planes of time ``s+1`` they determine
         (*valid* along z — no zero-fill; the caller's shifting buffers
-        provide the z context).  In-plane shifts are zero-filled.  Every
-        z-slice offset is static, so each dz group is one vectorized 2-D
-        application over a ``(B, Y, X)`` block.
+        provide the z context).  In-plane shifts are zero-filled, unless
+        ``inplane_crops = (cy, cx)`` requests valid-mode narrowing there
+        too (XY-tiled streaming: the tile's fetched y/x halo provides
+        true context and the live region shrinks one radius per step —
+        DESIGN.md §9.1).  Every z-slice offset is static, so each dz
+        group is one vectorized 2-D application over a ``(B, Y, X)``
+        block.
         """
         assert self.groups is not None, "window_step is for 3-D tap sets"
         rad = self.radius
         assert window.shape[0] == batch + 2 * rad
+        cy, cx = inplane_crops
         acc = None
         for dz, taps2d in self.groups:
             block = window[rad + dz:rad + dz + batch]
             if len(taps2d) == 1 and taps2d[0][0] == (0, 0):
-                contrib = block * jnp.asarray(taps2d[0][1], window.dtype)
+                iy = slice(cy, block.shape[1] - cy) if cy else slice(None)
+                ix = slice(cx, block.shape[2] - cx) if cx else slice(None)
+                contrib = (block[:, iy, ix]
+                           * jnp.asarray(taps2d[0][1], window.dtype))
             else:
                 star = split_star(taps2d, 2)
                 if star is not None:
-                    contrib = apply_taps_star(block, star[0], star[1], 2)
+                    contrib = apply_taps_star(block, star[0], star[1], 2,
+                                              crops=(cy, cx))
                 else:
-                    contrib = apply_taps_generic(block, taps2d, 2)
+                    contrib = apply_taps_generic(block, taps2d, 2,
+                                                 crops=(cy, cx))
             acc = contrib if acc is None else acc + contrib
         return acc if mask is None else acc * mask
 

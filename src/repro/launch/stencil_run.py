@@ -12,26 +12,35 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import roofline as rl
-from repro.core.planner import plan
+from repro.core.planner import plan as make_plan
 from repro.core.stencil_spec import TABLE2, get
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref, sweep
 from repro.stencils.data import init_domain, reduced_domain
 
 
 def run_single(name: str, *, t: int | None = None, scale: int = 64,
                check: bool = True):
     spec = get(name)
-    pl = plan(spec, rl.TPU_V5E)
-    depth = t or min(pl.t, 6)
+    eplan = make_plan(spec, rl.TPU_V5E)
+    depth = t or min(eplan.t, 6)
     shape = reduced_domain(spec, scale)
     x = init_domain(spec, shape)
     t0 = time.time()
-    y = ops.ebisu_stencil(x, spec, depth, plan=pl, interpret=True)
+    if depth > eplan.t:
+        # deeper than the plan's sweet spot: run T = depth total steps as
+        # plan-depth sweeps through the zero-copy executor instead of one
+        # over-deep sweep (whose halo would eat the tile)
+        y = sweep.run_sweeps(x, spec, depth, plan=eplan, interpret=True)
+        how = f"sweeps={sweep.sweep_schedule(depth, eplan.t)}"
+    else:
+        y = ops.ebisu_stencil(x, spec, depth, plan=eplan, interpret=True)
+        how = "single-sweep"
     y.block_until_ready()
     dt = time.time() - t0
-    line = (f"[stencil] {name:11s} domain={shape} t={depth} "
-            f"plan(t={pl.t}, tile={pl.block}, lazy_batch={pl.lazy_batch}, "
-            f"buffers={pl.parallelism.num_buffers}) "
+    line = (f"[stencil] {name:11s} domain={shape} t={depth} {how} "
+            f"plan(t={eplan.t}, tile={eplan.block}, "
+            f"lazy_batch={eplan.lazy_batch}, "
+            f"buffers={eplan.parallelism.num_buffers}) "
             f"{dt*1e3:.0f}ms")
     if check:
         want = ref.reference(x, spec, depth)

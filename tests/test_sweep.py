@@ -1,0 +1,175 @@
+"""Multi-sweep executor: schedule algebra, reference equivalence, the
+padded-layout contract, launch caching, and the bench regression gate."""
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.stencil_spec import get
+from repro.kernels import ref, sweep
+from repro.kernels.stencil2d import padded_shape_2d
+from repro.stencils.data import init_domain
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_sweep_schedule():
+    assert sweep.sweep_schedule(24, 6) == (6, 6, 6, 6)
+    assert sweep.sweep_schedule(25, 6) == (6, 6, 6, 6, 1)
+    assert sweep.sweep_schedule(5, 8) == (5,)
+    assert sweep.sweep_schedule(0, 4) == ()
+    assert sum(sweep.sweep_schedule(37, 5)) == 37
+
+
+@pytest.mark.parametrize("name,shape,total,t", [
+    ("j2d5pt", (97, 83), 25, 6),     # remainder sweep (25 % 6 != 0)
+    ("j2d9pt", (64, 60), 10, 4),
+    ("j3d7pt", (20, 9, 13), 10, 4),
+    ("j3d27pt", (14, 10, 12), 7, 3),
+])
+def test_run_sweeps_matches_reference(name, shape, total, t):
+    spec = get(name)
+    x = init_domain(spec, shape)
+    got = sweep.run_sweeps(x, spec, total, t=t, interpret=True)
+    want = ref.reference_unrolled(x, spec, total)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_run_sweeps_plan_depth_default():
+    """t=None: per-sweep depth comes from the shape-bucketed §6 plan."""
+    spec = get("j2d5pt")
+    x = init_domain(spec, (48, 40))
+    p = sweep.plan_bucketed(spec, x.shape)
+    total = p.t + 2                       # forces a remainder sweep too
+    got = sweep.run_sweeps(x, spec, total, interpret=True)
+    want = ref.reference_unrolled(x, spec, total)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_run_sweeps_zero_steps_identity():
+    spec = get("j2d5pt")
+    x = init_domain(spec, (16, 16))
+    assert sweep.run_sweeps(x, spec, 0, t=4, interpret=True) is x
+
+
+def test_padded_layout_contract():
+    """DESIGN.md §9.3: padded layout is closed under chained sweeps —
+    out-of-domain cells are zero after every sweep, and the uniform-depth
+    padded chain equals the reference on the domain."""
+    spec = get("j2d5pt")
+    t, total = 3, 9
+    height, width = 45, 70
+    x = init_domain(spec, (height, width))
+    bh = 64
+    hp, wp = padded_shape_2d(spec, t, bh, height, width)
+    xp = jnp.zeros((hp, wp), jnp.float32).at[:height, :width].set(x)
+    out = sweep.run_sweeps_padded(xp, spec, total, t=t, height=height,
+                                  width=width, bh=bh, interpret=True)
+    assert out.shape == (hp, wp)
+    body = np.asarray(out)[:height, :width]
+    want = np.asarray(ref.reference_unrolled(x, spec, total))
+    np.testing.assert_allclose(body, want, atol=1e-4, rtol=1e-4)
+    pad = np.asarray(out).copy()
+    pad[:height, :width] = 0.0
+    assert np.all(pad == 0.0)
+
+
+def test_sweep_tile_3d_fits_vmem_model():
+    """The executor never launches a 3-D config its own §6 model rejects:
+    the (zc, batch) it picks stays within the hardware budget at the
+    haloed working extents (at the plan's own depth a fit is guaranteed)."""
+    from repro.core import roofline as rl
+    from repro.core.planner import vmem_required_3d_batched
+    from repro.core.stencil_spec import TABLE2
+    from repro.kernels.stencil3d import xy_tile
+
+    for hw in (rl.TPU_V5E, rl.A100_FP64):
+        for spec in (s for s in TABLE2.values() if s.ndim == 3):
+            shape = spec.domain
+            p = sweep.plan_bucketed(spec, shape, hw)
+            zc, ty, tx, batch = sweep._sweep_tile_3d(spec, p.t, shape, hw, p)
+            halo = spec.halo(p.t)
+            ty_r, tiled_y = xy_tile(spec, p.t, shape[1], ty)
+            tx_r, tiled_x = xy_tile(spec, p.t, shape[2], tx)
+            ny = ty_r + 2 * halo if tiled_y else shape[1]
+            nx = tx_r + 2 * halo if tiled_x else shape[2]
+            need = vmem_required_3d_batched(spec, p.t, zc, batch, ny, nx,
+                                            hw.s_cell,
+                                            p.parallelism.num_buffers)
+            budget = hw.onchip_device_bytes or hw.onchip_bytes
+            assert need <= budget, (hw.name, spec.name, zc, batch,
+                                    need / budget)
+
+
+def test_sweep_tile_3d_rejects_over_budget_depth():
+    """An off-plan depth too deep for the hardware budget raises instead
+    of silently launching a config the §6 model says does not fit."""
+    from repro.core import roofline as rl
+
+    spec = get("j3d7pt")
+    shape = spec.domain
+    p = sweep.plan_bucketed(spec, shape, rl.A100_FP64)
+    with pytest.raises(ValueError, match="does not fit"):
+        sweep._sweep_tile_3d(spec, p.t + 8, shape, rl.A100_FP64, p)
+
+
+def test_run_sweeps_rejects_stream_mode():
+    spec = get("j2d5pt")
+    x = init_domain(spec, (16, 16))
+    with pytest.raises(ValueError, match="stream"):
+        sweep.run_sweeps(x, spec, 4, t=2, mode="stream", interpret=True)
+
+
+def test_launch_cache_reuse():
+    spec = get("j3d7pt")
+    x = init_domain(spec, (12, 8, 10))
+    a = sweep.run_sweeps(x, spec, 8, t=4, interpret=True)
+    n_cached = len(sweep._LAUNCH_CACHE)
+    b = sweep.run_sweeps(x, spec, 8, t=4, interpret=True)
+    assert len(sweep._LAUNCH_CACHE) == n_cached   # second call hits cache
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------- bench gate --------
+def _run_gate(path):
+    return subprocess.run(
+        [sys.executable, os.path.join(_ROOT, "scripts", "bench_gate.py"),
+         "--file", str(path)], capture_output=True, text=True)
+
+
+def _entry(rev, **rows):
+    return {"timestamp": "2026-01-01T00:00:00Z", "rev": rev,
+            "rows": {k: {"us_per_call": v, "derived": ""}
+                     for k, v in rows.items()}}
+
+
+def test_bench_gate_pass_and_fail(tmp_path):
+    ok = tmp_path / "ok.json"
+    ok.write_text(json.dumps({"entries": [
+        _entry("a", **{"kernel/x": 100.0, "kernel/y": 50.0}),
+        _entry("b", **{"kernel/x": 110.0, "kernel/y": 40.0,
+                       "sweep/new": 10.0}),   # +10% and a new row: OK
+    ]}))
+    r = _run_gate(ok)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"entries": [
+        _entry("a", **{"kernel/x": 100.0}),
+        _entry("b", **{"kernel/x": 120.0}),   # +20% wall time: FAIL
+    ]}))
+    r = _run_gate(bad)
+    assert r.returncode == 1
+    assert "FAIL" in r.stdout
+
+
+def test_bench_gate_single_entry_ok(tmp_path):
+    one = tmp_path / "one.json"
+    one.write_text(json.dumps({"entries": [_entry("a", **{"kernel/x": 1.0})]}))
+    assert _run_gate(one).returncode == 0

@@ -74,6 +74,53 @@ def test_window_step_is_valid_mode_of_full_step(spec, batch):
                                atol=1e-5, rtol=1e-5)
 
 
+# --------------------------------------------------- trapezoid narrowing ---
+@pytest.mark.parametrize("spec", ALL, ids=lambda s: s.name)
+@pytest.mark.parametrize("t", [1, 2, 4])
+def test_trapezoid_chain_matches_full_chain_and_oracle(spec, t):
+    """Narrowed chain == full zero-fill chain == independent numpy oracle
+    on the interior (cells ≥ t·rad from the narrowed edges): boundary
+    effects travel one radius per step, so the trapezoid's valid-mode
+    context reproduces them exactly (DESIGN.md §9.1)."""
+    eng = tp.engine_for(spec.taps, spec.ndim)
+    rad = eng.radius
+    if spec.ndim == 2:
+        shape, axes = (2 * t * rad + 7, 15), (0,)
+    else:
+        # the 3-D streamer narrows the in-plane axes (z is streamed)
+        shape, axes = (2 * t * rad + 5, 2 * t * rad + 6, 9), (1, 2)
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal(shape).astype(np.float32)
+    oracle = x.copy()
+    for _ in range(t):
+        oracle = numpy_step(oracle, spec.taps)
+    crop = tuple(slice(t * rad, n - t * rad) if a in axes else slice(None)
+                 for a, n in enumerate(shape))
+    got = eng.chain_trapezoid(jnp.asarray(x), t, axes=axes)
+    np.testing.assert_allclose(np.asarray(got), oracle[crop],
+                               atol=1e-4, rtol=1e-4)
+    full = eng.chain(jnp.asarray(x), t)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full[crop]),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("spec", [s for s in ALL if s.ndim == 3],
+                         ids=lambda s: s.name)
+def test_window_step_inplane_valid_mode(spec):
+    """In-plane valid-mode narrowing == interior of the zero-fill result."""
+    rad = spec.radius
+    rng = np.random.default_rng(5)
+    window = jnp.asarray(rng.standard_normal(
+        (3 + 2 * rad, 9 + 2 * rad, 11 + 2 * rad)).astype(np.float32))
+    eng = tp.engine_for(spec.taps, 3)
+    got = eng.window_step(window, 3, inplane_crops=(rad, rad))
+    full = eng.step(window)
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(full[rad:rad + 3, rad:-rad, rad:-rad]),
+        atol=1e-5, rtol=1e-5)
+
+
 def test_leading_axes_broadcast():
     """Batched (leading-axis) application == per-slice application."""
     spec = get("j2d25pt")
@@ -108,11 +155,12 @@ def test_halo_exact_traffic_bound(spec, t):
     assert reads < 3.0  # strictly better than whole-neighbor-block fetching
 
 
-@pytest.mark.parametrize("name,t,tile", [("j2d5pt", 6, 128),
-                                         ("j3d7pt", 4, 16)])
-def test_traffic_ratio_consistent_with_roofline(name, t, tile):
+@pytest.mark.parametrize("name,t,shape", [("j2d5pt", 6, (256, 256)),
+                                          ("j3d7pt", 4, (32, 24, 32))])
+def test_traffic_ratio_consistent_with_roofline(name, t, shape):
     """bench_kernels' modeled ratio == the same quantity expressed through
-    roofline.component_times (Eq 2 with halo-inflated D_gm)."""
+    roofline.component_times (Eq 2 with halo-inflated D_gm).  The ratio is
+    derived from the tile the launch actually resolves."""
     from benchmarks.bench_kernels import modeled_traffic_ratio, reads_per_elem
 
     spec = get(name)
@@ -120,14 +168,31 @@ def test_traffic_ratio_consistent_with_roofline(name, t, tile):
     d = 1e6  # any domain size — the ratio is size-free
     t_gm_naive = sum(
         rl.component_times(spec, 1, hw, d_all=d)[0] for _ in range(t))
-    d_eff = d * (reads_per_elem(spec, t, tile) + 1) / 2
+    d_eff = d * (reads_per_elem(spec, t, shape) + 1) / 2
     t_gm_blocked = rl.component_times(spec, t, hw, d_gm=d_eff, d_all=d)[0]
-    assert modeled_traffic_ratio(spec, t, tile) == pytest.approx(
+    assert modeled_traffic_ratio(spec, t, shape) == pytest.approx(
         t_gm_naive / t_gm_blocked)
     # j2d5pt t=6 @ bh=128: ~2.7x less input HBM traffic than whole-block
     if name == "j2d5pt":
-        fetched, body = input_rows_per_strip(spec, t, tile)
+        fetched, body = input_rows_per_strip(spec, t, 128)
         assert 3 * body / fetched == pytest.approx(2.75, abs=0.1)
+
+
+def test_reads_per_elem_tracks_launched_tile():
+    """The bench's traffic model follows the resolved launch, not the
+    default tile constants: a plan with a different tile changes it."""
+    from benchmarks.bench_kernels import reads_per_elem
+    from repro.core.planner import plan
+    from repro.kernels.ops import launch_geometry
+
+    spec = get("j3d7pt")
+    p = plan(spec, rl.TPU_V5E)
+    shape = (256, 64, 64)
+    default = reads_per_elem(spec, p.t, shape)
+    planned = reads_per_elem(spec, p.t, shape, plan=p)
+    g = launch_geometry(spec, p.t, shape, plan=p)
+    assert planned == pytest.approx(g["fetched_cells"] / g["body_cells"])
+    assert planned != default  # plan.zc differs from the default chunk
 
 
 # --------------------------------------------------- batch algebra ---------
