@@ -11,10 +11,19 @@ the plan-less default tile constants.
 ``sweep/`` rows measure the zero-copy multi-sweep executor against the
 naive driver loop (one ``ebisu_stencil`` call per sweep, re-padding and
 re-dispatching every ``t`` steps) at ``T`` total time steps.
+
+``program/`` rows measure the compile-once front door: steady-state
+per-call time of a held ``StencilProgram`` handle vs the legacy
+``ops.ebisu_stencil`` per-call path (which re-resolves the program from
+the bounded caches on every call), and one vmapped ``run_batched``
+dispatch vs a Python loop of per-field ``run`` calls.
 """
 from __future__ import annotations
 
+import warnings
+
 from benchmarks.common import time_fn, time_pair
+from repro.api import compile_stencil
 from repro.core.stencil_spec import StencilSpec, get
 from repro.kernels import ops, sweep
 from repro.stencils.data import init_domain
@@ -49,8 +58,63 @@ KERNEL_CASES = (("j2d5pt", (256, 256), 6),
 SWEEP_CASES = (("j2d5pt", (256, 256), 6, 24),
                ("j3d7pt", (32, 24, 32), 4, 24))
 
+PROGRAM_CASES = (("j2d5pt", (256, 256), 6),
+                 ("j3d7pt", (32, 24, 32), 4))
+
+BATCH_CASE = ("j2d5pt", (128, 128), 4, 12, 4)   # name, shape, t, T, batch
+
+
+def _program_rows():
+    import jax.numpy as jnp
+
+    out = []
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        for name, shape, t in PROGRAM_CASES:
+            spec = get(name)
+            x = init_domain(spec, shape)
+            # legacy tiles (plan=None) on both sides: the delta isolates
+            # the per-call resolution overhead, not a tile change
+            prog = compile_stencil(spec, shape, t=t, plan=None,
+                                   interpret=True)
+            prog.apply(x)                       # compile outside timing
+            us_prog, us_legacy = time_pair(
+                lambda: prog.apply(x),
+                lambda: ops.ebisu_stencil(x, spec, t, interpret=True))
+            out.append((f"program/{name}-t{t}", us_prog,
+                        f"legacy_percall_us={us_legacy:.0f}|"
+                        f"overhead={us_legacy / us_prog - 1:+.1%}|"
+                        f"note=held-handle-vs-legacy-shim-steady-state"))
+
+        name, shape, t, total, nb = BATCH_CASE
+        spec = get(name)
+        xs = jnp.stack([init_domain(spec, shape, seed=i)
+                        for i in range(nb)])
+        prog = compile_stencil(spec, shape, t=t, interpret=True)
+        prog.run_batched(xs, total)             # compile outside timing
+
+        def looped():
+            return [prog.run(xs[i], total) for i in range(nb)]
+
+        us_batched, us_looped = time_pair(
+            lambda: prog.run_batched(xs, total), looped)
+        out.append((f"program/{name}-batch{nb}-T{total}", us_batched,
+                    f"looped_us={us_looped:.0f}|"
+                    f"speedup={us_looped / us_batched:.2f}x|"
+                    f"note=one-vmapped-dispatch-vs-python-loop-of-run"))
+    return out
+
 
 def rows():
+    with warnings.catch_warnings():
+        # the kernel/sweep rows intentionally measure the legacy entry
+        # points (trajectory continuity across PRs) — silence their
+        # deprecation notes without leaking the filter process-wide
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return _rows()
+
+
+def _rows():
     out = []
     for name, shape, t in KERNEL_CASES:
         spec = get(name)
@@ -84,4 +148,6 @@ def rows():
                     f"speedup={us_loop / us_exec:.2f}x|"
                     f"sweeps={len(sweep.sweep_schedule(total, t))}|"
                     f"note=plan-wired-executor-vs-planless-persweep-calls"))
+
+    out.extend(_program_rows())
     return out

@@ -54,13 +54,41 @@ def persist_kernel_rows(rows) -> None:
         f.write("\n")
 
 
+def min_merge(passes: list[list]) -> list:
+    """Per-row min across repeated measurement passes.
+
+    The tracked estimator is best-of-N wall time (see ``common.time_fn``:
+    shared-CPU contamination is one-sided).  One tight pass can sit
+    entirely inside a neighbor-load burst lasting minutes; re-measuring
+    the same rows in several passes spread over the run and keeping each
+    row's minimum (with that pass's derived column, so ratios stay
+    internally consistent) is the same estimator over a wider, harder-to-
+    contaminate sample."""
+    best: dict = {}
+    order: list = []
+    for rows in passes:
+        for name, us, derived in rows:
+            if name not in best:
+                order.append(name)
+                best[name] = (us, derived)
+            elif isinstance(us, (int, float)) and us < best[name][0]:
+                best[name] = (us, derived)
+    return [(name, *best[name]) for name in order]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run only modules whose name contains this")
     ap.add_argument("--no-persist", action="store_true",
                     help="skip appending kernel rows to BENCH_kernels.json")
+    ap.add_argument("--passes", type=int, default=1,
+                    help="measurement passes per module, min-merged per row "
+                         "(burst-resistant best-of-N on a noisy shared CPU)")
     args = ap.parse_args()
+    if args.passes < 1:
+        ap.error("--passes must be >= 1 (an empty entry would vacuously "
+                 "pass the bench gate)")
 
     from benchmarks import (bench_kernels, fig7_speedups, fig8_resources,
                             fig9_breakdown, lm_roofline, table2_suite,
@@ -82,7 +110,7 @@ def main() -> None:
         if args.only and args.only not in name:
             continue
         try:
-            rows = mod.rows()
+            rows = min_merge([mod.rows() for _ in range(args.passes)])
             emit(rows)
             if name == "kernels" and not args.no_persist:
                 persist_kernel_rows(rows)

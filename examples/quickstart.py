@@ -8,23 +8,23 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 
-from repro.core import roofline as rl
-from repro.core.planner import plan
+from repro.api import compile_stencil
 from repro.core.stencil_spec import get
-from repro.kernels import ops, ref
+from repro.kernels import ref
 from repro.stencils.data import init_domain
 
 spec = get("j2d5pt")
 
-# 1. plan: the §5/§6 model decides depth + tiling for TPU v5e
-p = plan(spec, rl.TPU_V5E, domain=(512, 512))
+# 1. compile: the §5/§6 model decides depth + tiling for TPU v5e, once
+prog = compile_stencil(spec, (512, 512))
+p = prog.plan
 print(f"planner: t={p.t}, tile={p.block}, ring={p.ring} "
       f"({p.addressing}), predicted {p.pp.pp_cells_per_s/1e9:.0f} GCells/s, "
       f"bottleneck={p.pp.bottleneck}")
 
 # 2. run: t temporally-blocked steps in ONE pass over memory
 x = init_domain(spec, (512, 512))
-y = ops.ebisu_stencil(x, spec, t=p.t, plan=p)
+y = prog.apply(x)
 
 # 3. trust: blocked == unblocked, exactly
 want = ref.reference(x, spec, p.t)

@@ -25,12 +25,24 @@ import sys
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
+import dataclasses  # noqa: E402
+
 from benchmarks.common import time_fn  # noqa: E402
+from repro.api import compile_stencil
 from repro.core import roofline as rl
 from repro.core.planner import plan
 from repro.core.stencil_spec import TABLE2, get
 from repro.kernels import ref
 from repro.stencils.data import init_domain, reduced_domain
+
+
+def _pinned(p, spec, t: int, tile: int):
+    """The §6 plan with (t, leading tile) pinned to a sweep point — the
+    program front door honors an explicit plan verbatim, which is how the
+    empirical search drives the same dispatch path the planner does."""
+    return dataclasses.replace(
+        p, t=t, halo=spec.halo(t), block=(tile,) + p.block[1:],
+        lazy_batch=min(p.lazy_batch, tile))
 
 
 def sweep_one(name: str, scale: int, depths: list[int]):
@@ -45,14 +57,10 @@ def sweep_one(name: str, scale: int, depths: list[int]):
         want = ref.reference(x, spec, t)
         for tile in tiles:
             for mode in modes:
-                if spec.ndim == 2:
-                    from repro.kernels.stencil2d import ebisu2d
-                    fn = lambda: ebisu2d(  # noqa: E731
-                        x, spec, t, bh=tile, mode=mode, interpret=True)
-                else:
-                    from repro.kernels.stencil3d import ebisu3d
-                    fn = lambda: ebisu3d(  # noqa: E731
-                        x, spec, t, zc=tile, interpret=True)
+                prog = compile_stencil(spec, shape, t=t, mode=mode,
+                                       interpret=True,
+                                       plan=_pinned(p, spec, t, tile))
+                fn = lambda: prog.apply(x)  # noqa: E731
                 out = fn()
                 err = float(abs(out - want).max())
                 us = time_fn(fn, warmup=1, iters=3)

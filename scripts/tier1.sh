@@ -24,6 +24,28 @@ SEED_FAILED=25
 SEED_PASSED=165
 SEED_ERRORS=3
 
+# Import hygiene: the compile-once front door answers backend questions at
+# compile time — `import repro.api` must never initialize a JAX backend.
+if PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+import sys
+import repro.api                              # must not touch a backend
+try:
+    from jax._src import xla_bridge           # private: probe defensively
+    backends = getattr(xla_bridge, "_backends", {})
+except Exception as e:                        # jax moved the internals —
+    print(f"tier1: backend probe unavailable ({e!r}); check skipped")
+    sys.exit(0)                               # don't misreport as a leak
+if backends:
+    print(f"tier1: FAIL — import repro.api initialized: {list(backends)}")
+    sys.exit(1)
+EOF
+then
+    echo "tier1: repro.api import is backend-free"
+else
+    echo "tier1: FAIL — import repro.api initialized a JAX backend"
+    exit 1
+fi
+
 log=$(mktemp)
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
     --continue-on-collection-errors "$@" 2>&1 | tee "$log" | tail -3

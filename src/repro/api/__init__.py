@@ -1,0 +1,30 @@
+"""Public compile-once API for the EBISU temporal-blocking kernels.
+
+    from repro.api import Boundary, compile_stencil
+    prog = compile_stencil(spec, shape, t=4, boundary=Boundary.periodic())
+    y = prog.run(x, T=64)
+
+See README.md for the full quick-start and the deprecation policy for
+the legacy entry points (``ops.ebisu_stencil``, ``sweep.run_sweeps``).
+Importing this package never initializes a JAX backend (checked by
+``scripts/tier1.sh``).
+"""
+from repro.api.boundary import Boundary
+from repro.api.program import (ProgramCache, StencilProgram, cache_stats,
+                               clear_caches, compile_stencil, plan_bucketed,
+                               resolve_geometry, run_sweeps_padded,
+                               sweep_once, sweep_schedule)
+
+__all__ = [
+    "Boundary",
+    "ProgramCache",
+    "StencilProgram",
+    "cache_stats",
+    "clear_caches",
+    "compile_stencil",
+    "plan_bucketed",
+    "resolve_geometry",
+    "run_sweeps_padded",
+    "sweep_once",
+    "sweep_schedule",
+]

@@ -1,0 +1,99 @@
+"""First-class boundary conditions for stencil programs.
+
+The seed kernels hard-coded one boundary: zero Dirichlet ("cells outside
+the domain read as 0 at every step"), realized for free by the tap
+engine's zero-fill slicing.  ``Boundary`` makes the condition an explicit
+compile-time property of a :class:`~repro.api.program.StencilProgram`,
+with three kinds:
+
+  * ``Boundary.dirichlet(v)`` — cells outside the domain read as the
+    constant ``v`` at every step.  ``v = 0`` is the seed semantics and
+    the fast path (the padded layout is closed under it, DESIGN.md §9.3).
+    ``v ≠ 0`` is run *exactly* through the zero-Dirichlet kernels via the
+    shift identity ``u_t = Z_t(u_0 − v) + v`` (``Z_t`` = t zero-Dirichlet
+    steps), valid because every Table-2 tap set is normalized to sum 1 —
+    a constant field is a fixed point, so subtracting ``v`` turns
+    constant-``v`` ghosts into zero ghosts.  Checked at compile time.
+  * ``Boundary.periodic()`` — the domain wraps (torus).  Executed by
+    deep-halo ghost pinning: extend the field by ``halo = t·rad`` wrapped
+    cells, run the zero-Dirichlet kernel on the extended domain, crop.
+    The zero-fill corruption at the extended edge travels one radius per
+    step and reaches exactly the domain boundary after ``t`` steps — the
+    interior is exact (the §9.3 error-zone argument, pointed outward).
+  * ``Boundary.reflect()`` — mirror boundary (``ghost(−k) = u(k)``,
+    ``jnp.pad mode='reflect'``).  Same ghost-pinning execution; exact
+    when the tap set is mirror-symmetric per axis (the mirrored exterior
+    then evolves as the mirror of the interior), which all nine Table-2
+    sets are.  Checked at compile time.
+
+Because the padded layout is only closed under *zero Dirichlet*, the
+multi-sweep executor re-pins the ghost halo once per sweep for
+periodic/reflect programs (the boundary-aware §9.3 contract — see
+DESIGN.md §10); Dirichlet programs of either value keep the zero-copy
+pad-once/crop-once path.
+
+The low-level mechanics (ghost extension, the shift/extend/crop wrapper,
+and the compatibility checks) live in ``repro.kernels.taps`` so the
+kernels and the oracle share them without depending on this package.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.kernels.taps import check_boundary
+
+KINDS = ("dirichlet", "periodic", "reflect")
+
+
+@dataclasses.dataclass(frozen=True)
+class Boundary:
+    """A boundary condition: ``kind`` ∈ {dirichlet, periodic, reflect}.
+
+    Immutable and hashable — it is part of every program/runner cache key
+    and is passed to the jitted kernels as a static argument.
+    """
+
+    kind: str
+    value: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown boundary kind {self.kind!r}; "
+                             f"expected one of {KINDS}")
+        if self.kind != "dirichlet" and self.value != 0.0:
+            raise ValueError(f"{self.kind} boundary takes no value")
+
+    # ----------------------------------------------------- constructors ----
+    @staticmethod
+    def dirichlet(value: float = 0.0) -> "Boundary":
+        """Constant ``value`` outside the domain at every time step."""
+        return Boundary("dirichlet", float(value))
+
+    @staticmethod
+    def periodic() -> "Boundary":
+        """Wrap-around (torus) domain."""
+        return Boundary("periodic")
+
+    @staticmethod
+    def reflect() -> "Boundary":
+        """Mirror boundary: ``ghost(-k) = u(k)`` about the edge cell."""
+        return Boundary("reflect")
+
+    # ------------------------------------------------------- predicates ----
+    @property
+    def is_zero_dirichlet(self) -> bool:
+        return self.kind == "dirichlet" and self.value == 0.0
+
+    def validate_for(self, spec) -> None:
+        """Raise ``ValueError`` if ``spec`` cannot run under this boundary
+        exactly (non-unit tap sum for non-zero Dirichlet; non-mirror-
+        symmetric taps for reflect)."""
+        check_boundary(spec.taps, self)
+
+    def __repr__(self) -> str:  # compact, key-friendly
+        if self.kind == "dirichlet":
+            return f"Boundary.dirichlet({self.value:g})"
+        return f"Boundary.{self.kind}()"
+
+
+ZERO = Boundary.dirichlet(0.0)

@@ -1,0 +1,672 @@
+"""``StencilProgram``: the compile-once front door for temporal blocking.
+
+EBISU's pitch (paper §6) is *plan once, then drive aggressive deep
+blocking tile-by-tile*.  This module is where that contract lives:
+``compile_stencil`` resolves the §6 plan, the launch geometry, and the
+boundary-condition execution strategy exactly once, and hands back an
+immutable :class:`StencilProgram` whose runners are built and memoized
+per launch signature — every other entry point in the repo
+(``ops.ebisu_stencil``, ``sweep.run_sweeps``, ``ops.launch_geometry``)
+is a thin shim over a program, so there is exactly ONE geometry/dispatch
+resolution path.
+
+    prog = compile_stencil(get("j3d7pt"), (256, 288, 384), t=4)
+    y   = prog.run(x, T=64)          # T steps as chained zero-copy sweeps
+    ys  = prog.run_batched(xs, T=64) # leading batch axis, one vmapped runner
+
+Execution surface:
+
+  * ``apply(x, t=None)``   — one temporally-blocked sweep.
+  * ``run(x, T)``          — a ``T``-step simulation as chained sweeps;
+    subsumes the zero-copy multi-sweep executor (DESIGN.md §9.3: pad
+    once / crop once / dispatch once for Dirichlet boundaries, per-sweep
+    ghost re-pin for periodic/reflect — DESIGN.md §10).
+  * ``run_padded(xp, T)``  — the 2-D padded-layout chain with a donated
+    carry (XLA ping-pongs two buffers where the backend supports it).
+  * ``run_batched(xs, T=None)`` — leading batch axis via one vmapped
+    padded runner (a single jitted dispatch for the whole batch).
+  * ``geometry(t=None)`` / ``cost(t=None)`` / ``cache_stats()`` —
+    introspection: the launch the kernels will resolve, the §5 roofline
+    estimate, and the hit/miss counters of the bounded caches.
+
+All module-global state is held in explicit bounded :class:`ProgramCache`
+instances (LRU + counters + ``clear()``) — no unbounded module dicts.
+Importing this module never initializes a JAX backend (checked by
+``scripts/tier1.sh``): backend questions are answered at compile time,
+not import time.
+"""
+from __future__ import annotations
+
+import functools
+import math
+import warnings
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.boundary import ZERO, Boundary
+from repro.core import roofline as rl
+from repro.core.planner import (EbisuPlan, fit_streaming_batch,
+                                plan as make_plan, vmem_required_2d)
+from repro.core.stencil_spec import StencilSpec, lift_2d_to_3d
+from repro.kernels.stencil2d import (ebisu2d, ebisu2d_padded,
+                                     padded_shape_2d, strip_geometry)
+from repro.kernels.stencil3d import (_pad_to, ebisu3d, ebisu3d_padded,
+                                     launch_geometry_3d, padded_shape_3d,
+                                     xy_tile)
+from repro.kernels.taps import ghost_extend
+
+# plan-less fallback tiles (the request defaults the legacy entry points
+# used; programs compiled without an explicit plan resolve one instead)
+DEFAULT_BH_2D = 128
+DEFAULT_ZC_3D = 16
+DEFAULT_ZC_STREAM_2D = 64
+
+_BUCKET = 64
+
+
+# =========================================================== ProgramCache ==
+class ProgramCache:
+    """Bounded LRU cache with hit/miss counters — the explicit replacement
+    for the module-global plan/launch dicts the executor used to hide
+    state in.  Eviction only drops memoization: handles already returned
+    stay valid."""
+
+    def __init__(self, maxsize: int = 128, name: str = ""):
+        if maxsize < 1:
+            raise ValueError("maxsize must be >= 1")
+        self.maxsize = maxsize
+        self.name = name
+        self.hits = 0
+        self.misses = 0
+        self._d: OrderedDict = OrderedDict()
+
+    def get(self, key, default=None):
+        try:
+            val = self._d[key]
+        except KeyError:
+            self.misses += 1
+            return default
+        self._d.move_to_end(key)
+        self.hits += 1
+        return val
+
+    def put(self, key, value) -> None:
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+
+    def get_or_build(self, key, build):
+        """Return the cached value, building (and caching) it on miss."""
+        sentinel = object()
+        val = self.get(key, sentinel)
+        if val is sentinel:
+            val = build()
+            self.put(key, val)
+        return val
+
+    def clear(self) -> None:
+        self._d.clear()
+
+    def stats(self) -> dict:
+        return {"name": self.name, "size": len(self._d),
+                "maxsize": self.maxsize, "hits": self.hits,
+                "misses": self.misses}
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, key) -> bool:
+        return key in self._d
+
+
+PROGRAM_CACHE = ProgramCache(64, "programs")   # compile_stencil results
+PLAN_CACHE = ProgramCache(256, "plans")        # §6 plans, shape-bucketed
+RUNNER_CACHE = ProgramCache(128, "runners")    # jitted runners per launch
+
+
+def cache_stats() -> dict:
+    """Hit/miss/size counters for all three bounded caches."""
+    return {c.name: c.stats()
+            for c in (PROGRAM_CACHE, PLAN_CACHE, RUNNER_CACHE)}
+
+
+def clear_caches() -> None:
+    for c in (PROGRAM_CACHE, PLAN_CACHE, RUNNER_CACHE):
+        c.clear()
+
+
+def plan_bucketed(spec: StencilSpec, shape: tuple[int, ...],
+                  hw: rl.HardwareModel = rl.TPU_V5E) -> EbisuPlan:
+    """§6 plan memoized per (spec, 64-rounded domain, hardware) in the
+    bounded ``PLAN_CACHE`` — a simulation loop over near-identical
+    domains plans once per bucket."""
+    bucket = tuple(_pad_to(d, _BUCKET) for d in shape)
+    key = (spec.name, bucket, hw.name)
+    return PLAN_CACHE.get_or_build(
+        key, lambda: make_plan(spec, hw, domain=bucket))
+
+
+# ======================================================= geometry / sweep ==
+# The ONE place tile/grid/pad geometry is resolved (kernel rounding
+# included) and the ONE place a sweep dispatches to a kernel.  ops.py and
+# sweep.py delegate here.
+
+def _tile_request(spec: StencilSpec, t: int, plan: EbisuPlan | None,
+                  mode: str) -> dict:
+    """The tile request a launch resolves from the plan (or the legacy
+    request defaults), pre-kernel-rounding — the ONE derivation shared by
+    geometry introspection and dispatch, so `prog.geometry()` can never
+    drift from the tile `apply` actually launches."""
+    halo = spec.halo(t)
+    if spec.ndim == 2 and mode != "stream":
+        bh = plan.block[0] if plan is not None else max(DEFAULT_BH_2D, halo)
+        return dict(bh=max(bh, halo))
+    if spec.ndim == 2:                   # stream mode: lifted 3-D launch
+        zc = plan.block[0] if plan is not None else \
+            max(DEFAULT_ZC_STREAM_2D, halo)
+        return dict(zc=max(zc, halo),
+                    tx=plan.block[1] if plan is not None else None)
+    zc = plan.block[0] if plan is not None else max(DEFAULT_ZC_3D, halo)
+    return dict(zc=max(zc, halo),
+                ty=plan.block[1] if plan is not None else None,
+                tx=plan.block[2] if plan is not None else None)
+
+
+def resolve_geometry(spec: StencilSpec, t: int, shape: tuple[int, ...], *,
+                     plan: EbisuPlan | None = None,
+                     mode: str = "fused") -> dict:
+    """The geometry a one-sweep launch with these args will execute.
+
+    Resolves the same tile/grid the kernels resolve (rounding included),
+    so modeled traffic is derived from the launch that actually runs —
+    not from the plan-less default tile (``fetched_cells``/``body_cells``
+    are the halo-exact input cells and output cells per grid step).
+    """
+    req = _tile_request(spec, t, plan, mode)
+    if spec.ndim == 2 and mode != "stream":
+        bh, halo = strip_geometry(spec, t, req["bh"])
+        hp, wp = padded_shape_2d(spec, t, bh, *shape)
+        return dict(grid=(hp // bh,), block=(bh, shape[1]), halo=halo,
+                    padded=(hp, wp),
+                    fetched_cells=(bh + 2 * halo) * wp,
+                    body_cells=bh * wp)
+    if spec.ndim == 2:                   # stream mode: lifted 3-D geometry
+        return launch_geometry_3d(lift_2d_to_3d(spec), t,
+                                  (shape[0], 1, shape[1]), **req)
+    return launch_geometry_3d(spec, t, shape, **req)
+
+
+def sweep_once(x: jnp.ndarray, spec: StencilSpec, t: int, *,
+               plan: EbisuPlan | None = None, mode: str = "fused",
+               interpret: bool = True,
+               boundary: Boundary | None = None) -> jnp.ndarray:
+    """One temporally-blocked sweep — the sole plan→kernel dispatch path.
+
+    When a §6 plan is supplied, its decisions are wired all the way into
+    the kernels: tile height/chunk depth (``plan.block``), streaming
+    batch (``plan.lazy_batch``) and DMA pipeline depth
+    (``plan.parallelism.num_buffers``) — none of the planner's outputs
+    are decorative.
+    """
+    lazy = plan.lazy_batch if plan is not None else None
+    nbuf = plan.parallelism.num_buffers if plan is not None else None
+    b = None if boundary is None or boundary.is_zero_dirichlet else boundary
+    req = _tile_request(spec, t, plan, mode)
+    if spec.ndim == 2:
+        if mode == "stream":
+            # the paper's 2-D scheme: stream y through the multi-queue
+            # (no overlapped halo along the streamed dim); the planner's
+            # §6.4 tile width (plan.block[1]) tiles x with overlapped halo.
+            # The boundary is resolved before lifting (the size-1 lifted
+            # axis must not be ghost-extended).
+            if b is not None:
+                from repro.kernels.taps import with_boundary
+                return with_boundary(
+                    x, 2, spec.halo(t), b,
+                    lambda v: sweep_once(v, spec, t, plan=plan, mode=mode,
+                                         interpret=interpret))
+            y = ebisu3d(x[:, None, :], lift_2d_to_3d(spec), t,
+                        lazy_batch=lazy, num_buffers=nbuf,
+                        interpret=interpret, **req)
+            return y[:, 0, :]
+        return ebisu2d(x, spec, t, mode=mode, num_buffers=nbuf,
+                       interpret=interpret, boundary=b, **req)
+    return ebisu3d(x, spec, t, lazy_batch=lazy, num_buffers=nbuf,
+                   interpret=interpret, boundary=b, **req)
+
+
+# ===================================================== multi-sweep runner ==
+def sweep_schedule(total_t: int, t: int) -> tuple[int, ...]:
+    """Per-sweep depths covering ``total_t`` steps: full-depth sweeps plus
+    one shallower remainder sweep when ``t`` does not divide ``total_t``."""
+    assert total_t >= 0 and t >= 1
+    q, r = divmod(total_t, t)
+    return (t,) * q + ((r,) if r else ())
+
+
+def _grouped(schedule: tuple[int, ...]) -> list[tuple[int, int]]:
+    """Runs of equal depth: [(depth, count), ...] — one layout per run."""
+    out: list[list[int]] = []
+    for d in schedule:
+        if out and out[-1][0] == d:
+            out[-1][1] += 1
+        else:
+            out.append([d, 1])
+    return [(d, c) for d, c in out]
+
+
+def _budget(hw: rl.HardwareModel) -> float:
+    return hw.onchip_device_bytes or hw.onchip_bytes
+
+
+def _sweep_tile_2d(spec: StencilSpec, t: int, shape: tuple[int, int],
+                   hw: rl.HardwareModel, plan: EbisuPlan) -> int:
+    """Widest strip the §6 VMEM model affords (§6.4: wider before deeper),
+    halving toward the plan's tile when the whole domain does not fit."""
+    height, width = shape
+    halo = spec.halo(t)
+    nbuf = plan.parallelism.num_buffers
+    bh, _ = strip_geometry(spec, t, max(height, halo))
+    floor = max(min(plan.block[0], height), halo)
+    while (vmem_required_2d(spec, t, bh, width, hw.s_cell, nbuf)
+           > _budget(hw) and bh // 2 >= floor):
+        bh, _ = strip_geometry(spec, t, bh // 2)
+    return bh
+
+
+def _sweep_tile_3d(spec: StencilSpec, t: int, shape: tuple[int, int, int],
+                   hw: rl.HardwareModel, plan: EbisuPlan
+                   ) -> tuple[int, int | None, int | None, int]:
+    """Deepest z chunk — and the streaming batch — the §6 VMEM model
+    affords at the plan's xy tile.  The batch is fitted with the
+    planner's own ``fit_streaming_batch``, so the executor never
+    launches a configuration the shared model says does not fit: at the
+    plan's own (zc, depth) the planner already proved one exists, and an
+    off-plan depth too deep for the budget raises instead of silently
+    over-committing on-chip memory."""
+    zdim, ydim, xdim = shape
+    halo = spec.halo(t)
+    nbuf = plan.parallelism.num_buffers
+    ty, tx = plan.block[1], plan.block[2]
+    ty_r, tiled_y = xy_tile(spec, t, ydim, ty)
+    tx_r, tiled_x = xy_tile(spec, t, xdim, tx)
+    ny = ty_r + 2 * halo if tiled_y else ydim
+    nx = tx_r + 2 * halo if tiled_x else xdim
+
+    def fit_batch(zc_c: int) -> int | None:
+        return fit_streaming_batch(spec, t, zc_c, ny, nx, hw.s_cell,
+                                   nbuf, _budget(hw))
+
+    zc = _pad_to(max(zdim, halo), halo)
+    floor = min(zc, _pad_to(max(min(plan.block[0], zdim), halo), halo))
+    batch = fit_batch(zc)
+    while batch is None and zc > floor:
+        zc = max(floor, _pad_to(zc // 2, halo))
+        batch = fit_batch(zc)
+    if batch is None:
+        raise ValueError(
+            f"{spec.name}: depth t={t} at xy tile ({ny}, {nx}) does not fit "
+            f"the {hw.name} on-chip budget even at zc={zc} with a one-halo "
+            f"batch — lower t toward the plan's depth ({plan.t})")
+    return zc, (ty if tiled_y else None), (tx if tiled_x else None), batch
+
+
+def _supports_donation() -> bool:
+    return jax.default_backend() in ("tpu", "gpu")
+
+
+def _build_chain(spec: StencilSpec, shape: tuple[int, ...], dtype,
+                 total_t: int, depth: int, plan: EbisuPlan,
+                 hw: rl.HardwareModel, mode: str, interpret: bool,
+                 boundary: Boundary):
+    """The multi-sweep schedule as an un-jitted f(x) -> x (DESIGN.md §9.3).
+
+    Zero Dirichlet: the zero-copy padded chain — pad once per depth
+    group, chain the padded kernel, crop once.  dirichlet(v): the same
+    chain under the exact constant shift (still zero-copy).
+    periodic/reflect: the padded layout is NOT closed under the boundary,
+    so each sweep re-pins the ghost halo from the evolved field and runs
+    the zero-Dirichlet core on the extended domain (DESIGN.md §10).
+    """
+    groups = _grouped(sweep_schedule(total_t, depth))
+    nbuf = plan.parallelism.num_buffers
+    repin = boundary.kind in ("periodic", "reflect")
+
+    def halo_of(d: int) -> int:
+        return spec.halo(d) if repin else 0
+
+    if spec.ndim == 2:
+        height, width = shape
+
+        def ext(d: int) -> tuple[int, int]:
+            return height + 2 * halo_of(d), width + 2 * halo_of(d)
+
+        cfg = {d: (_sweep_tile_2d(spec, d, ext(d), hw, plan),)
+               for d, _ in groups}
+
+        def chain(v: jnp.ndarray) -> jnp.ndarray:
+            for d, count in groups:
+                (bh,) = cfg[d]
+                he, we = ext(d)
+                halo = halo_of(d)
+                hp, wp = padded_shape_2d(spec, d, bh, he, we)
+
+                def sweep(xp, d=d, bh=bh, he=he, we=we):
+                    return ebisu2d_padded(xp, spec, d, height=he, width=we,
+                                          bh=bh, mode=mode,
+                                          num_buffers=nbuf,
+                                          interpret=interpret)
+
+                if repin:
+                    # layout not closed under the boundary: re-pin the
+                    # ghost halo from the evolved field every sweep
+                    for _ in range(count):
+                        xp = jnp.zeros((hp, wp), jnp.float32).at[
+                            :he, :we].set(ghost_extend(v, 2, halo, boundary))
+                        xp = sweep(xp)
+                        v = xp[halo:halo + height, halo:halo + width]
+                else:
+                    # zero-copy: pad once, chain, crop once (§9.3)
+                    xp = jnp.zeros((hp, wp), jnp.float32).at[
+                        :height, :width].set(v)
+                    for _ in range(count):
+                        xp = sweep(xp)
+                    v = xp[:height, :width]
+            return v
+    else:
+        zdim, ydim, xdim = shape
+
+        def ext3(d: int) -> tuple[int, int, int]:
+            h = halo_of(d)
+            return zdim + 2 * h, ydim + 2 * h, xdim + 2 * h
+
+        cfg = {d: _sweep_tile_3d(spec, d, ext3(d), hw, plan)
+               for d, _ in groups}
+
+        def chain(v: jnp.ndarray) -> jnp.ndarray:
+            for d, count in groups:
+                zc, ty, tx, batch = cfg[d]
+                ze, ye, xe = ext3(d)
+                halo = halo_of(d)
+                zp, yp, xp_ = padded_shape_3d(spec, d, (ze, ye, xe), zc=zc,
+                                              ty=ty, tx=tx)
+
+                def sweep(xp, d=d, zc=zc, ty=ty, tx=tx, batch=batch,
+                          ze=ze, ye=ye, xe=xe):
+                    return ebisu3d_padded(xp, spec, d, zdim=ze, ydim=ye,
+                                          xdim=xe, zc=zc, ty=ty, tx=tx,
+                                          lazy_batch=batch,
+                                          num_buffers=nbuf,
+                                          interpret=interpret)
+
+                if repin:
+                    for _ in range(count):
+                        xp = jnp.zeros((zp, yp, xp_), jnp.float32).at[
+                            :ze, :ye, :xe].set(
+                                ghost_extend(v, 3, halo, boundary))
+                        xp = sweep(xp)
+                        v = xp[halo:halo + zdim, halo:halo + ydim,
+                               halo:halo + xdim]
+                else:
+                    xp = jnp.zeros((zp, yp, xp_), jnp.float32).at[
+                        :zdim, :ydim, :xdim].set(v)
+                    for _ in range(count):
+                        xp = sweep(xp)
+                    v = xp[:zdim, :ydim, :xdim]
+            return v
+
+    if boundary.kind == "dirichlet" and boundary.value != 0.0:
+        shift = boundary.value
+
+        def run(x):
+            w = x.astype(jnp.float32) - shift
+            return (chain(w) + shift).astype(dtype)
+    else:
+        def run(x):
+            return chain(x.astype(jnp.float32)).astype(dtype)
+
+    return run
+
+
+# ------------------------------------------- 2-D donated padded carry ------
+def _padded_chain_2d(xp, spec, total_t, *, t, height, width, bh, mode,
+                     num_buffers, interpret):
+    assert total_t % t == 0, "padded chaining needs a uniform sweep depth"
+    for _ in range(total_t // t):
+        xp = ebisu2d_padded(xp, spec, t, height=height, width=width, bh=bh,
+                            mode=mode, num_buffers=num_buffers,
+                            interpret=interpret)
+    return xp
+
+
+@functools.lru_cache(maxsize=None)
+def _padded_runner_2d(donate: bool):
+    return jax.jit(_padded_chain_2d,
+                   static_argnames=("spec", "total_t", "t", "height",
+                                    "width", "bh", "mode", "num_buffers",
+                                    "interpret"),
+                   donate_argnums=(0,) if donate else ())
+
+
+def run_sweeps_padded(xp: jnp.ndarray, spec: StencilSpec, total_t: int, *,
+                      t: int, height: int, width: int, bh: int,
+                      mode: str = "fused", num_buffers: int | None = None,
+                      interpret: bool = True) -> jnp.ndarray:
+    """Padded-layout sweep chain (2-D, zero Dirichlet), ``t | total_t``.
+
+    The caller owns the padded buffer and the layout never changes, so
+    the carry is donated where the backend supports it — XLA ping-pongs
+    two buffers across sweeps instead of allocating per sweep
+    (DESIGN.md §9.3).  The donation choice is made at call time so
+    importing this module never initializes a JAX backend."""
+    return _padded_runner_2d(_supports_donation())(
+        xp, spec, total_t, t=t, height=height, width=width, bh=bh,
+        mode=mode, num_buffers=num_buffers, interpret=interpret)
+
+
+# ============================================================== programs ==
+def _plan_key(plan: EbisuPlan | None):
+    if plan is None:
+        return None
+    return (plan.hw_name, plan.t, plan.block, plan.lazy_batch,
+            plan.parallelism.num_buffers)
+
+
+class StencilProgram:
+    """An immutable compiled stencil: spec + domain shape + §6 plan +
+    boundary + launch mode, with memoized runners.  Construct via
+    :func:`compile_stencil`."""
+
+    def __init__(self, key, spec: StencilSpec, shape: tuple[int, ...],
+                 dtype, t: int, plan: EbisuPlan | None,
+                 hw: rl.HardwareModel, boundary: Boundary, mode: str,
+                 interpret: bool):
+        self._key = key
+        self.spec = spec
+        self.shape = shape
+        self.dtype = dtype
+        self.t = t
+        self.plan = plan
+        self.hw = hw
+        self.boundary = boundary
+        self.mode = mode
+        self.interpret = interpret
+
+    # ------------------------------------------------------- execution ----
+    def _check(self, x, batched: bool = False):
+        want = ((-1,) + self.shape) if batched else self.shape
+        if x.ndim != len(want) or any(
+                w != -1 and n != w for n, w in zip(x.shape, want)):
+            raise ValueError(
+                f"program compiled for shape {self.shape} "
+                f"({'batched ' if batched else ''}got {x.shape}); "
+                "compile_stencil a new program for a new domain shape")
+
+    def apply(self, x: jnp.ndarray, t: int | None = None) -> jnp.ndarray:
+        """One temporally-blocked sweep of depth ``t`` (default: the
+        program's compiled depth)."""
+        self._check(x)
+        depth = self.t if t is None else t
+        if depth < 1:
+            raise ValueError(f"temporal depth must be >= 1, got {depth} "
+                             "(run(x, 0) is the identity)")
+        fn = RUNNER_CACHE.get_or_build(
+            (self._key, "apply", depth),
+            lambda: jax.jit(functools.partial(
+                sweep_once, spec=self.spec, t=depth, plan=self.plan,
+                mode=self.mode, interpret=self.interpret,
+                boundary=self.boundary)))
+        return fn(x)
+
+    def _run_fn(self, total_t: int):
+        plan = self.plan or plan_bucketed(self.spec, self.shape, self.hw)
+        depth = max(1, min(self.t, total_t))
+        if self.spec.ndim == 2 and self.mode not in ("fused", "scratch"):
+            raise ValueError(
+                f"run supports 2-D modes 'fused'/'scratch', got "
+                f"{self.mode!r} (use apply for the lifted 'stream' path)")
+        return _build_chain(self.spec, self.shape, self.dtype, total_t,
+                            depth, plan, self.hw, self.mode,
+                            self.interpret, self.boundary)
+
+    def run(self, x: jnp.ndarray, total_t: int) -> jnp.ndarray:
+        """``total_t`` steps as chained temporally-blocked sweeps under a
+        single cached jit — the zero-copy executor (remainder sweep
+        included when the program depth does not divide ``total_t``)."""
+        self._check(x)
+        if total_t == 0:
+            return x
+        fn = RUNNER_CACHE.get_or_build(
+            (self._key, "run", total_t),
+            lambda: jax.jit(self._run_fn(total_t)))
+        return fn(x)
+
+    def run_batched(self, xs: jnp.ndarray,
+                    total_t: int | None = None) -> jnp.ndarray:
+        """A leading batch axis of independent fields through ONE vmapped
+        padded runner — a single jitted dispatch for the whole batch,
+        instead of a Python loop of per-field launches."""
+        self._check(xs, batched=True)
+        total_t = self.t if total_t is None else total_t
+        if total_t == 0:
+            return xs
+        fn = RUNNER_CACHE.get_or_build(
+            (self._key, "batched", total_t),
+            lambda: jax.jit(jax.vmap(self._run_fn(total_t))))
+        return fn(xs)
+
+    def run_padded(self, xp: jnp.ndarray, total_t: int) -> jnp.ndarray:
+        """Uniform-depth padded-layout chain with a donated carry (2-D,
+        zero Dirichlet, ``t | total_t``); see :func:`run_sweeps_padded`.
+        The caller owns the ``padded_shape`` buffer across calls."""
+        if (self.spec.ndim != 2 or not self.boundary.is_zero_dirichlet
+                or self.mode not in ("fused", "scratch")):
+            raise ValueError("run_padded is the 2-D zero-Dirichlet "
+                             "padded-carry path (fused/scratch); use run()")
+        bh = self.geometry()["block"][0]
+        return run_sweeps_padded(
+            xp, self.spec, total_t, t=self.t, height=self.shape[0],
+            width=self.shape[1], bh=bh, mode=self.mode,
+            num_buffers=(self.plan.parallelism.num_buffers
+                         if self.plan else None),
+            interpret=self.interpret)
+
+    # ---------------------------------------------------- introspection ----
+    def compute_shape(self, t: int | None = None) -> tuple[int, ...]:
+        """The domain the kernels actually compute: the program shape,
+        ghost-extended by ``t·rad`` per side for re-pinning boundaries."""
+        depth = self.t if t is None else t
+        if self.boundary.kind in ("periodic", "reflect"):
+            h = self.spec.halo(depth)
+            return tuple(n + 2 * h for n in self.shape)
+        return self.shape
+
+    def geometry(self, t: int | None = None) -> dict:
+        """The launch geometry a depth-``t`` sweep resolves (tile, grid,
+        halo, padded layout, halo-exact fetched/body cells)."""
+        depth = self.t if t is None else t
+        return resolve_geometry(self.spec, depth, self.compute_shape(depth),
+                                plan=self.plan, mode=self.mode)
+
+    def cost(self, t: int | None = None) -> rl.RooflineResult:
+        """§5 practical-attainable estimate at depth ``t``.  At the plan's
+        own depth this is the plan's prediction (redundancy/sync valid
+        fractions included); off-plan depths get the ideal-V roofline."""
+        depth = self.t if t is None else t
+        if self.plan is not None and depth == self.plan.t:
+            return self.plan.pp
+        return rl.attainable(self.spec, depth, self.hw, rst=True,
+                             d_all=math.prod(self.shape))
+
+    def cache_stats(self) -> dict:
+        """Counters of the module's bounded caches (programs, plans,
+        runners) — see :func:`cache_stats`."""
+        return cache_stats()
+
+    def __repr__(self) -> str:
+        return (f"StencilProgram({self.spec.name}, shape={self.shape}, "
+                f"t={self.t}, boundary={self.boundary!r}, "
+                f"mode={self.mode!r}, hw={self.hw.name}, "
+                f"interpret={self.interpret})")
+
+
+def compile_stencil(spec: StencilSpec, shape: tuple[int, ...], *,
+                    dtype=jnp.float32, t: int | None = None,
+                    hw: rl.HardwareModel = rl.TPU_V5E,
+                    boundary: Boundary | None = None, mode: str = "fused",
+                    interpret: bool | None = None,
+                    plan: EbisuPlan | None | str = "auto") -> StencilProgram:
+    """Compile a stencil to an immutable :class:`StencilProgram`.
+
+    Resolves — exactly once — the §6 plan (shape-bucketed, memoized),
+    the boundary execution strategy (validated against the tap set), and
+    the interpret/lowering choice (Pallas-TPU on TPU backends,
+    interpreter elsewhere).  Programs are memoized in the bounded
+    ``PROGRAM_CACHE``; recompiling with identical arguments returns the
+    same handle.
+
+    ``t`` is the per-sweep temporal depth (default: the plan's §6.2
+    choice).  ``plan`` is normally derived ("auto"); pass an explicit
+    ``EbisuPlan`` to pin tiles (autotuning), or ``None`` for the legacy
+    request-default tiles the deprecated entry points used.
+    """
+    shape = tuple(int(n) for n in shape)
+    if len(shape) != spec.ndim:
+        raise ValueError(f"{spec.name} is {spec.ndim}-D; got shape {shape}")
+    valid_modes = ("fused", "scratch", "stream") if spec.ndim == 2 \
+        else ("fused", "scratch")        # 3-D ignores scratch (seed compat)
+    if mode not in valid_modes:
+        raise ValueError(f"unknown mode {mode!r} for a {spec.ndim}-D spec; "
+                         f"expected one of {valid_modes}")
+    boundary = ZERO if boundary is None else boundary
+    boundary.validate_for(spec)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if isinstance(plan, str):
+        if plan != "auto":
+            raise ValueError(f"plan must be an EbisuPlan, None, or 'auto'; "
+                             f"got {plan!r}")
+        plan = plan_bucketed(spec, shape, hw)
+    depth = t if t is not None else (plan.t if plan is not None else 1)
+    if depth < 1:
+        raise ValueError(f"temporal depth must be >= 1, got {depth}")
+    key = (spec, shape, jnp.dtype(dtype).name, depth, hw.name,
+           boundary, mode, bool(interpret), _plan_key(plan))
+    cached = PROGRAM_CACHE.get(key)
+    if cached is not None:
+        return cached
+    prog = StencilProgram(key, spec, shape, jnp.dtype(dtype), depth, plan,
+                          hw, boundary, mode, bool(interpret))
+    PROGRAM_CACHE.put(key, prog)
+    return prog
+
+
+def deprecated_entry(name: str, replacement: str) -> None:
+    """One-per-call-site deprecation notice for the legacy entry points
+    (policy in README.md: shims stay for two PR cycles, geometry/dispatch
+    already lives here)."""
+    warnings.warn(f"{name} is deprecated; use {replacement} "
+                  "(repro.api) instead", DeprecationWarning, stacklevel=3)

@@ -1,72 +1,47 @@
-"""Public entry points for the stencil kernels.
+"""Legacy entry points for the stencil kernels — DEPRECATED shims.
 
-``ebisu_stencil`` dispatches on dimensionality and picks interpret mode
-automatically (Pallas-TPU lowering on TPU backends, interpreter on CPU — the
-kernels are *written* for TPU BlockSpec/VMEM tiling and *validated* on CPU).
+Every function here delegates to ``repro.api`` (the compile-once
+``StencilProgram`` front door), which owns the single geometry/dispatch
+resolution path; nothing in this module re-derives tile, grid, or pad
+geometry.  New code should compile a program instead:
 
-When a §6 plan is supplied, its decisions are wired all the way into the
-kernels: tile height/chunk depth (``plan.block``), streaming batch
-(``plan.lazy_batch``) and DMA pipeline depth (``plan.parallelism.
-num_buffers``) — none of the planner's outputs are decorative.
+    from repro.api import compile_stencil
+    prog = compile_stencil(spec, x.shape, t=t)
+    y = prog.apply(x)            # was: ops.ebisu_stencil(x, spec, t)
+
+Deprecation policy (README.md): these shims keep the seed signatures
+working, emit a ``DeprecationWarning`` once per call site, and will be
+removed two PR cycles after the ``repro.api`` introduction.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.planner import EbisuPlan, plan as make_plan
+from repro.api.program import (DEFAULT_BH_2D, DEFAULT_ZC_3D,  # noqa: F401
+                               DEFAULT_ZC_STREAM_2D, compile_stencil,
+                               deprecated_entry, resolve_geometry)
+from repro.core.planner import EbisuPlan
 from repro.core.roofline import TPU_V5E
-from repro.core.stencil_spec import StencilSpec, lift_2d_to_3d
+from repro.core.stencil_spec import StencilSpec
 from repro.kernels import ref as ref_ops
-from repro.kernels.stencil2d import (ebisu2d, padded_shape_2d,
-                                     strip_geometry)
-from repro.kernels.stencil3d import ebisu3d, launch_geometry_3d
-
-
-# plan-less fallback tiles (bench traffic modeling resolves the launched
-# tile via launch_geometry below — these are only the request defaults)
-DEFAULT_BH_2D = 128
-DEFAULT_ZC_3D = 16
-DEFAULT_ZC_STREAM_2D = 64
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def ebisu_stencil(x: jnp.ndarray, spec: StencilSpec, t: int, *,
                   plan: EbisuPlan | None = None,
                   mode: str = "fused",
-                  interpret: bool | None = None) -> jnp.ndarray:
-    """Apply ``t`` temporally-blocked stencil steps (EBISU execution)."""
-    interpret = _default_interpret() if interpret is None else interpret
-    lazy = plan.lazy_batch if plan is not None else None
-    nbuf = plan.parallelism.num_buffers if plan is not None else None
-    if spec.ndim == 2:
-        if mode == "stream":
-            # the paper's 2-D scheme: stream y through the multi-queue
-            # (no overlapped halo along the streamed dim); the planner's
-            # §6.4 tile width (plan.block[1]) tiles x with overlapped halo
-            zc = (plan.block[0] if plan is not None
-                  else max(DEFAULT_ZC_STREAM_2D, spec.halo(t)))
-            zc = max(zc, spec.halo(t))
-            tx = plan.block[1] if plan is not None else None
-            y = ebisu3d(x[:, None, :], lift_2d_to_3d(spec), t, zc=zc,
-                        tx=tx, lazy_batch=lazy, num_buffers=nbuf,
-                        interpret=interpret)
-            return y[:, 0, :]
-        bh = (plan.block[0] if plan is not None
-              else max(DEFAULT_BH_2D, spec.halo(t)))
-        bh = max(bh, spec.halo(t))
-        return ebisu2d(x, spec, t, bh=bh, mode=mode, num_buffers=nbuf,
-                       interpret=interpret)
-    zc = (plan.block[0] if plan is not None
-          else max(DEFAULT_ZC_3D, spec.halo(t)))
-    zc = max(zc, spec.halo(t))
-    ty = plan.block[1] if plan is not None else None
-    tx = plan.block[2] if plan is not None else None
-    return ebisu3d(x, spec, t, zc=zc, ty=ty, tx=tx, lazy_batch=lazy,
-                   num_buffers=nbuf, interpret=interpret)
+                  interpret: bool | None = None,
+                  boundary=None) -> jnp.ndarray:
+    """Apply ``t`` temporally-blocked stencil steps (EBISU execution).
+
+    DEPRECATED: compile a :class:`repro.api.StencilProgram` and call
+    ``.apply``.  ``plan=None`` keeps the seed's request-default tiles
+    (programs compiled through the front door resolve a §6 plan).
+    """
+    deprecated_entry("ops.ebisu_stencil", "compile_stencil(...).apply")
+    prog = compile_stencil(spec, x.shape, dtype=x.dtype, t=t, plan=plan,
+                           mode=mode, interpret=interpret,
+                           boundary=boundary)
+    return prog.apply(x)
 
 
 def launch_geometry(spec: StencilSpec, t: int, shape: tuple[int, ...], *,
@@ -74,41 +49,29 @@ def launch_geometry(spec: StencilSpec, t: int, shape: tuple[int, ...], *,
                     mode: str = "fused") -> dict:
     """The geometry an ``ebisu_stencil`` call with these args will launch.
 
-    Resolves the same tile/grid the kernels resolve (rounding included),
-    so modeled traffic is derived from the launch that actually runs —
-    not from the plan-less default tile (``fetched_cells``/``body_cells``
-    are the halo-exact input cells and output cells per grid step).
+    Shim over :func:`repro.api.resolve_geometry` — the sole tile/grid/pad
+    resolution path.
     """
-    halo = spec.halo(t)
-    if spec.ndim == 2 and mode != "stream":
-        bh = plan.block[0] if plan is not None else max(DEFAULT_BH_2D, halo)
-        bh, halo = strip_geometry(spec, t, max(bh, halo))
-        hp, wp = padded_shape_2d(spec, t, bh, *shape)
-        return dict(grid=(hp // bh,), block=(bh, shape[1]), halo=halo,
-                    padded=(hp, wp),
-                    fetched_cells=(bh + 2 * halo) * wp,
-                    body_cells=bh * wp)
-    if spec.ndim == 2:                   # stream mode: lifted 3-D geometry
-        zc = plan.block[0] if plan is not None else \
-            max(DEFAULT_ZC_STREAM_2D, halo)
-        tx = plan.block[1] if plan is not None else None
-        return launch_geometry_3d(lift_2d_to_3d(spec), t,
-                                  (shape[0], 1, shape[1]),
-                                  zc=max(zc, halo), tx=tx)
-    zc = plan.block[0] if plan is not None else max(DEFAULT_ZC_3D, halo)
-    return launch_geometry_3d(
-        spec, t, shape, zc=max(zc, halo),
-        ty=plan.block[1] if plan is not None else None,
-        tx=plan.block[2] if plan is not None else None)
+    return resolve_geometry(spec, t, tuple(shape), plan=plan, mode=mode)
 
 
 def ebisu_stencil_planned(x: jnp.ndarray, spec: StencilSpec, *,
                           hw=TPU_V5E, t: int | None = None,
-                          interpret: bool | None = None):
-    """Plan (t, tiles) with the §6 planner, then run. Returns (out, plan)."""
-    p = make_plan(spec, hw, domain=x.shape)
-    depth = t if t is not None else p.t
-    return ebisu_stencil(x, spec, depth, plan=p, interpret=interpret), p
+                          mode: str = "fused",
+                          interpret: bool | None = None,
+                          boundary=None):
+    """Plan (t, tiles) with the §6 planner, then run. Returns (out, plan).
+
+    DEPRECATED shim over ``compile_stencil`` — which is also where the
+    seed's silent drop of ``mode`` (always-fused) and of domain-
+    independent ``hw`` tweaks is fixed: both now thread through to the
+    compiled program.
+    """
+    deprecated_entry("ops.ebisu_stencil_planned", "compile_stencil")
+    prog = compile_stencil(spec, x.shape, dtype=x.dtype, t=t, hw=hw,
+                           mode=mode, interpret=interpret,
+                           boundary=boundary)
+    return prog.apply(x), prog.plan
 
 
 def naive_stencil(x: jnp.ndarray, spec: StencilSpec, t: int) -> jnp.ndarray:

@@ -1,9 +1,17 @@
 """Pure-jnp oracles for the stencil kernels.
 
-Semantics: zero (Dirichlet) boundary — cells outside the domain read as 0 at
-*every* time step.  ``reference(x, spec, t)`` applies ``t`` plain steps; every
-temporally-blocked implementation in this repo must match it exactly (up to
-dtype rounding).
+Default semantics: zero (Dirichlet) boundary — cells outside the domain read
+as 0 at *every* time step.  ``reference(x, spec, t)`` applies ``t`` plain
+steps; every temporally-blocked implementation in this repo must match it
+exactly (up to dtype rounding).
+
+``boundary`` (a ``repro.api.boundary.Boundary``) switches the condition:
+each oracle step ghost-extends the field by one stencil radius with the
+boundary rule (constant / wrap / mirror) and applies the taps in valid
+mode over the extension — the textbook per-step ghost-cell discretization.
+The blocked kernels implement the same condition by per-*sweep* deep-halo
+pinning (``taps.with_boundary``); the equivalence of the two is exactly
+what the boundary tests assert.
 
 One step is one call into the shared slice-based tap engine
 (``repro.kernels.taps``) — the same engine the Pallas kernels run, so the
@@ -16,27 +24,39 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.stencil_spec import StencilSpec
-from repro.kernels.taps import engine_for
+from repro.kernels.taps import (check_boundary, engine_for, ghost_extend,
+                                is_zero_dirichlet)
 
 
-def stencil_step(x: jnp.ndarray, spec: StencilSpec) -> jnp.ndarray:
-    """One Jacobi step of ``spec`` with zero boundaries. Works for 2-D / 3-D.
+def stencil_step(x: jnp.ndarray, spec: StencilSpec,
+                 boundary=None) -> jnp.ndarray:
+    """One Jacobi step of ``spec``. Works for 2-D / 3-D.
 
-    The whole array is treated as domain: the zero-fill shifts of the tap
-    engine realize the Dirichlet boundary exactly at the array edges.
+    Zero Dirichlet (default): the whole array is treated as domain — the
+    zero-fill shifts of the tap engine realize the boundary exactly at
+    the array edges.  Other boundaries: per-step ghost fill of one
+    radius, taps applied in valid mode over it.
     """
-    return engine_for(spec.taps, spec.ndim).step(x)
+    engine = engine_for(spec.taps, spec.ndim)
+    if is_zero_dirichlet(boundary):
+        return engine.step(x)
+    check_boundary(spec.taps, boundary)
+    rad = spec.radius
+    xe = ghost_extend(x, spec.ndim, rad, boundary)
+    return engine.step(xe, crops=(rad,) * spec.ndim)
 
 
-def reference(x: jnp.ndarray, spec: StencilSpec, t: int) -> jnp.ndarray:
+def reference(x: jnp.ndarray, spec: StencilSpec, t: int,
+              boundary=None) -> jnp.ndarray:
     """``t`` un-blocked steps — the ground truth for temporal blocking."""
     def body(_, v):
-        return stencil_step(v, spec)
+        return stencil_step(v, spec, boundary)
     return jax.lax.fori_loop(0, t, body, x) if t > 0 else x
 
 
-def reference_unrolled(x: jnp.ndarray, spec: StencilSpec, t: int) -> jnp.ndarray:
+def reference_unrolled(x: jnp.ndarray, spec: StencilSpec, t: int,
+                       boundary=None) -> jnp.ndarray:
     """Python-loop variant (differentiable / easier to inspect)."""
     for _ in range(t):
-        x = stencil_step(x, spec)
+        x = stencil_step(x, spec, boundary)
     return x

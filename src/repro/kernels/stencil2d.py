@@ -47,7 +47,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.stencil_spec import StencilSpec
-from repro.kernels.taps import engine_for
+from repro.kernels.taps import (check_boundary, engine_for,
+                                is_zero_dirichlet, with_boundary)
 
 
 def _strip_kernel(top_ref, mid_ref, bot_ref, out_ref, *scratch,
@@ -212,12 +213,25 @@ def ebisu2d_padded(xp: jnp.ndarray, spec: StencilSpec, t: int, *,
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "t", "bh", "mode",
-                                             "num_buffers", "interpret"))
+                                             "num_buffers", "interpret",
+                                             "boundary"))
 def ebisu2d(x: jnp.ndarray, spec: StencilSpec, t: int, *, bh: int = 128,
             mode: str = "fused", num_buffers: int | None = None,
-            interpret: bool = True) -> jnp.ndarray:
-    """Apply ``t`` temporally-blocked steps of ``spec`` to a 2-D field."""
+            interpret: bool = True, boundary=None) -> jnp.ndarray:
+    """Apply ``t`` temporally-blocked steps of ``spec`` to a 2-D field.
+
+    ``boundary`` (default: zero Dirichlet) is resolved by reduction to
+    the zero-Dirichlet core: constant shift for dirichlet(v), deep-halo
+    ghost pinning (extend by ``t·rad`` boundary-true cells, sweep, crop)
+    for periodic/reflect — see ``taps.with_boundary``.
+    """
     assert spec.ndim == 2
+    if not is_zero_dirichlet(boundary):
+        check_boundary(spec.taps, boundary)
+        return with_boundary(
+            x, 2, spec.halo(t), boundary,
+            lambda v: ebisu2d(v, spec, t, bh=bh, mode=mode,
+                              num_buffers=num_buffers, interpret=interpret))
     height, width = x.shape
     hp, wp = padded_shape_2d(spec, t, bh, height, width)
     xp = jnp.zeros((hp, wp), jnp.float32).at[:height, :width].set(

@@ -61,7 +61,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.multiqueue import stream_schedule
 from repro.core.stencil_spec import StencilSpec
-from repro.kernels.taps import engine_for
+from repro.kernels.taps import (check_boundary, engine_for,
+                                is_zero_dirichlet, with_boundary)
 
 
 def _pad_to(n: int, m: int) -> int:
@@ -358,13 +359,25 @@ def ebisu3d_padded(xpad: jnp.ndarray, spec: StencilSpec, t: int, *,
 
 @functools.partial(jax.jit, static_argnames=("spec", "t", "zc", "ty", "tx",
                                              "lazy_batch", "num_buffers",
-                                             "interpret"))
+                                             "interpret", "boundary"))
 def ebisu3d(x: jnp.ndarray, spec: StencilSpec, t: int, *, zc: int = 16,
             ty: int | None = None, tx: int | None = None,
             lazy_batch: int | None = None, num_buffers: int | None = None,
-            interpret: bool = True) -> jnp.ndarray:
-    """Apply ``t`` temporally-blocked steps of a 3-D ``spec`` via z-streaming."""
+            interpret: bool = True, boundary=None) -> jnp.ndarray:
+    """Apply ``t`` temporally-blocked steps of a 3-D ``spec`` via z-streaming.
+
+    ``boundary`` (default: zero Dirichlet) is resolved by reduction to
+    the zero-Dirichlet core — constant shift for dirichlet(v), per-sweep
+    deep-halo ghost pinning for periodic/reflect (``taps.with_boundary``).
+    """
     assert spec.ndim == 3
+    if not is_zero_dirichlet(boundary):
+        check_boundary(spec.taps, boundary)
+        return with_boundary(
+            x, 3, spec.halo(t), boundary,
+            lambda v: ebisu3d(v, spec, t, zc=zc, ty=ty, tx=tx,
+                              lazy_batch=lazy_batch, num_buffers=num_buffers,
+                              interpret=interpret))
     zdim, ydim, xdim = x.shape
     zp, yp, xp = padded_shape_3d(spec, t, x.shape, zc=zc, ty=ty, tx=tx)
     xpad = jnp.zeros((zp, yp, xp), jnp.float32).at[

@@ -1,205 +1,61 @@
-"""Zero-copy multi-sweep executor: a ``T``-step simulation as one launch.
+"""Multi-sweep executor entry points — DEPRECATED shims over ``repro.api``.
 
-A long simulation is ``T/t`` temporally-blocked sweeps.  Driving it by
-calling ``ebisu_stencil`` per sweep pays the full-domain pad, the
-full-domain crop, and a jit dispatch *every* ``t`` steps — repeated
-traffic the paper's whole scheme exists to avoid.  This module keeps the
-field in **padded layout** across sweeps and chains all of them under
-one jit:
+The zero-copy executor itself (padded-layout chaining, §6.4
+widest-tile-that-fits selection, shape-bucketed plan memoization, the
+donated padded carry) lives in ``repro.api.program`` now, owned by
+:class:`~repro.api.program.StencilProgram` — ``prog.run(x, T)`` is the
+executor, ``prog.run_padded`` the donated uniform-depth chain.  This
+module keeps the seed call surface working:
 
-  * pad once, crop once, dispatch once (DESIGN.md §9.3): the padded
-    layout is closed under a sweep — every kernel re-zeroes its
-    out-of-domain cells — so consecutive same-depth sweeps compose with
-    no re-layout at all.  Only a trailing remainder sweep (``T % t ≠ 0``,
-    whose smaller halo changes the strip geometry) re-lays out, once.
-  * **shape-bucketed plan cache + launch cache**: §6 planning is
-    memoized per (spec, 64-rounded domain, hardware) bucket, so a
-    simulation loop over many near-identical domains plans once per
-    bucket; the compiled runner is memoized per exact launch signature
-    (shape, T, depth, …), mirroring jit's own cache.
-  * **planner-true launch geometry**: each sweep runs at the widest
-    device tile the §6 VMEM model says fits — the §6.4 deeper-or-wider
-    rule taken to its limit (tile = whole padded domain when on-chip
-    capacity allows, i.e. the Pallas grid collapses toward one step per
-    sweep) — falling back to the plan's tile when it does not.
-  * **buffer donation** where the backend supports it: the padded carry
-    of ``run_sweeps_padded`` is donated, so XLA ping-pongs two buffers
-    (`input_output_aliasing`-style) instead of allocating per sweep.
+  * ``run_sweeps(x, spec, T, ...)``  →  ``compile_stencil(...).run(x, T)``
+  * ``run_sweeps_padded`` / ``sweep_schedule`` / ``plan_bucketed`` —
+    re-exported from ``repro.api.program``.
+  * The module-global ``_PLAN_CACHE`` / ``_LAUNCH_CACHE`` dicts are gone:
+    both now alias the bounded LRU :class:`ProgramCache` instances
+    (hit/miss counters, ``clear()``) the front door owns.
+
+Deprecation policy in README.md.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
+from repro.api.program import (PLAN_CACHE, RUNNER_CACHE,  # noqa: F401
+                               _grouped, _sweep_tile_2d, _sweep_tile_3d,
+                               compile_stencil, deprecated_entry,
+                               plan_bucketed, run_sweeps_padded,
+                               sweep_schedule)
 from repro.core import roofline as rl
-from repro.core.planner import (EbisuPlan, fit_streaming_batch,
-                                plan as make_plan, vmem_required_2d)
+from repro.core.planner import EbisuPlan
 from repro.core.stencil_spec import StencilSpec
-from repro.kernels.stencil2d import (ebisu2d_padded, padded_shape_2d,
-                                     strip_geometry)
-from repro.kernels.stencil3d import (_pad_to, ebisu3d_padded,
-                                     padded_shape_3d, xy_tile)
 
-_PLAN_CACHE: dict[tuple, EbisuPlan] = {}
-_LAUNCH_CACHE: dict[tuple, object] = {}
-_BUCKET = 64
-
-
-def sweep_schedule(total_t: int, t: int) -> tuple[int, ...]:
-    """Per-sweep depths covering ``total_t`` steps: full-depth sweeps plus
-    one shallower remainder sweep when ``t`` does not divide ``total_t``."""
-    assert total_t >= 0 and t >= 1
-    q, r = divmod(total_t, t)
-    return (t,) * q + ((r,) if r else ())
-
-
-def _grouped(schedule: tuple[int, ...]) -> list[tuple[int, int]]:
-    """Runs of equal depth: [(depth, count), ...] — one layout per run."""
-    out: list[list[int]] = []
-    for d in schedule:
-        if out and out[-1][0] == d:
-            out[-1][1] += 1
-        else:
-            out.append([d, 1])
-    return [(d, c) for d, c in out]
-
-
-def plan_bucketed(spec: StencilSpec, shape: tuple[int, ...],
-                  hw: rl.HardwareModel = rl.TPU_V5E) -> EbisuPlan:
-    """§6 plan memoized per (spec, 64-rounded domain, hardware)."""
-    bucket = tuple(_pad_to(d, _BUCKET) for d in shape)
-    key = (spec.name, bucket, hw.name)
-    if key not in _PLAN_CACHE:
-        _PLAN_CACHE[key] = make_plan(spec, hw, domain=bucket)
-    return _PLAN_CACHE[key]
-
-
-def _budget(hw: rl.HardwareModel) -> float:
-    return hw.onchip_device_bytes or hw.onchip_bytes
-
-
-def _sweep_tile_2d(spec: StencilSpec, t: int, shape: tuple[int, int],
-                   hw: rl.HardwareModel, plan: EbisuPlan) -> int:
-    """Widest strip the §6 VMEM model affords (§6.4: wider before deeper),
-    halving toward the plan's tile when the whole domain does not fit."""
-    height, width = shape
-    halo = spec.halo(t)
-    nbuf = plan.parallelism.num_buffers
-    bh, _ = strip_geometry(spec, t, max(height, halo))
-    floor = max(min(plan.block[0], height), halo)
-    while (vmem_required_2d(spec, t, bh, width, hw.s_cell, nbuf)
-           > _budget(hw) and bh // 2 >= floor):
-        bh, _ = strip_geometry(spec, t, bh // 2)
-    return bh
-
-
-def _sweep_tile_3d(spec: StencilSpec, t: int, shape: tuple[int, int, int],
-                   hw: rl.HardwareModel, plan: EbisuPlan
-                   ) -> tuple[int, int | None, int | None, int]:
-    """Deepest z chunk — and the streaming batch — the §6 VMEM model
-    affords at the plan's xy tile.  The batch is fitted with the
-    planner's own ``fit_streaming_batch``, so the executor never
-    launches a configuration the shared model says does not fit: at the
-    plan's own (zc, depth) the planner already proved one exists, and an
-    off-plan depth too deep for the budget raises instead of silently
-    over-committing on-chip memory."""
-    zdim, ydim, xdim = shape
-    halo = spec.halo(t)
-    nbuf = plan.parallelism.num_buffers
-    ty, tx = plan.block[1], plan.block[2]
-    ty_r, tiled_y = xy_tile(spec, t, ydim, ty)
-    tx_r, tiled_x = xy_tile(spec, t, xdim, tx)
-    ny = ty_r + 2 * halo if tiled_y else ydim
-    nx = tx_r + 2 * halo if tiled_x else xdim
-
-    def fit_batch(zc_c: int) -> int | None:
-        return fit_streaming_batch(spec, t, zc_c, ny, nx, hw.s_cell,
-                                   nbuf, _budget(hw))
-
-    zc = _pad_to(max(zdim, halo), halo)
-    floor = min(zc, _pad_to(max(min(plan.block[0], zdim), halo), halo))
-    batch = fit_batch(zc)
-    while batch is None and zc > floor:
-        zc = max(floor, _pad_to(zc // 2, halo))
-        batch = fit_batch(zc)
-    if batch is None:
-        raise ValueError(
-            f"{spec.name}: depth t={t} at xy tile ({ny}, {nx}) does not fit "
-            f"the {hw.name} on-chip budget even at zc={zc} with a one-halo "
-            f"batch — lower t toward the plan's depth ({plan.t})")
-    return zc, (ty if tiled_y else None), (tx if tiled_x else None), batch
-
-
-def _supports_donation() -> bool:
-    return jax.default_backend() in ("tpu", "gpu")
-
-
-def _build_runner(spec: StencilSpec, shape: tuple[int, ...], dtype,
-                  total_t: int, depth: int, plan: EbisuPlan,
-                  hw: rl.HardwareModel, mode: str, interpret: bool):
-    """Compile one jitted callable running the whole sweep schedule."""
-    groups = _grouped(sweep_schedule(total_t, depth))
-    nbuf = plan.parallelism.num_buffers
-
-    if spec.ndim == 2:
-        height, width = shape
-        cfg = {d: (_sweep_tile_2d(spec, d, shape, hw, plan),) for d, _ in groups}
-
-        def run(x):
-            v = x.astype(jnp.float32)
-            for d, count in groups:
-                (bh,) = cfg[d]
-                hp, wp = padded_shape_2d(spec, d, bh, height, width)
-                xp = jnp.zeros((hp, wp), jnp.float32
-                               ).at[:height, :width].set(v)
-                for _ in range(count):
-                    xp = ebisu2d_padded(xp, spec, d, height=height,
-                                        width=width, bh=bh, mode=mode,
-                                        num_buffers=nbuf,
-                                        interpret=interpret)
-                v = xp[:height, :width]
-            return v.astype(dtype)
-    else:
-        zdim, ydim, xdim = shape
-        cfg = {d: _sweep_tile_3d(spec, d, shape, hw, plan)
-               for d, _ in groups}
-
-        def run(x):
-            v = x.astype(jnp.float32)
-            for d, count in groups:
-                zc, ty, tx, batch = cfg[d]
-                zp, yp, xp_ = padded_shape_3d(spec, d, shape, zc=zc,
-                                              ty=ty, tx=tx)
-                xp = jnp.zeros((zp, yp, xp_), jnp.float32
-                               ).at[:zdim, :ydim, :xdim].set(v)
-                for _ in range(count):
-                    xp = ebisu3d_padded(xp, spec, d, zdim=zdim, ydim=ydim,
-                                        xdim=xdim, zc=zc, ty=ty, tx=tx,
-                                        lazy_batch=batch,
-                                        num_buffers=nbuf,
-                                        interpret=interpret)
-                v = xp[:zdim, :ydim, :xdim]
-            return v.astype(dtype)
-
-    return jax.jit(run)
+# Legacy aliases: the unbounded module dicts became bounded LRU caches.
+_PLAN_CACHE = PLAN_CACHE
+_LAUNCH_CACHE = RUNNER_CACHE
 
 
 def run_sweeps(x: jnp.ndarray, spec: StencilSpec, total_t: int, *,
                t: int | None = None, plan: EbisuPlan | None = None,
                hw: rl.HardwareModel = rl.TPU_V5E, mode: str = "fused",
-               interpret: bool | None = None) -> jnp.ndarray:
+               interpret: bool | None = None,
+               boundary=None) -> jnp.ndarray:
     """Apply ``total_t`` stencil steps as chained temporally-blocked sweeps.
+
+    DEPRECATED shim: compile a program and call ``.run`` —
+
+        prog = compile_stencil(spec, x.shape, t=t, hw=hw)
+        y = prog.run(x, total_t)
 
     Per-sweep depth is ``t`` (default: the §6 plan's depth).  The whole
     schedule — including a shallower remainder sweep when ``t`` does not
-    divide ``total_t`` — runs under a single cached jit in padded layout.
+    divide ``total_t`` — runs under a single cached jit.
     """
+    deprecated_entry("sweep.run_sweeps", "compile_stencil(...).run")
     if spec.ndim == 2 and mode not in ("fused", "scratch"):
         raise ValueError(
             f"run_sweeps supports 2-D modes 'fused'/'scratch', got {mode!r} "
-            "(use ops.ebisu_stencil for the lifted 'stream' path)")
+            "(use the program's apply for the lifted 'stream' path)")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if total_t == 0:
@@ -207,47 +63,7 @@ def run_sweeps(x: jnp.ndarray, spec: StencilSpec, total_t: int, *,
     if plan is None:
         plan = plan_bucketed(spec, x.shape, hw)
     depth = max(1, min(t if t is not None else plan.t, total_t))
-    key = (spec, x.shape, jnp.dtype(x.dtype).name, total_t, depth,
-           plan.block, plan.parallelism.num_buffers, hw.name, mode,
-           interpret)
-    runner = _LAUNCH_CACHE.get(key)
-    if runner is None:
-        runner = _build_runner(spec, x.shape, x.dtype, total_t, depth,
-                               plan, hw, mode, interpret)
-        _LAUNCH_CACHE[key] = runner
-    return runner(x)
-
-
-def _padded_chain_2d(xp, spec, total_t, *, t, height, width, bh, mode,
-                     num_buffers, interpret):
-    assert total_t % t == 0, "padded chaining needs a uniform sweep depth"
-    for _ in range(total_t // t):
-        xp = ebisu2d_padded(xp, spec, t, height=height, width=width, bh=bh,
-                            mode=mode, num_buffers=num_buffers,
-                            interpret=interpret)
-    return xp
-
-
-@functools.lru_cache(maxsize=None)
-def _padded_runner_2d(donate: bool):
-    return jax.jit(_padded_chain_2d,
-                   static_argnames=("spec", "total_t", "t", "height",
-                                    "width", "bh", "mode", "num_buffers",
-                                    "interpret"),
-                   donate_argnums=(0,) if donate else ())
-
-
-def run_sweeps_padded(xp: jnp.ndarray, spec: StencilSpec, total_t: int, *,
-                      t: int, height: int, width: int, bh: int,
-                      mode: str = "fused", num_buffers: int | None = None,
-                      interpret: bool = True) -> jnp.ndarray:
-    """Padded-layout sweep chain (2-D), ``t | total_t`` (uniform layout).
-
-    The caller owns the padded buffer and the layout never changes, so
-    the carry is donated where the backend supports it — XLA ping-pongs
-    two buffers across sweeps instead of allocating per sweep
-    (DESIGN.md §9.3).  The donation choice is made at call time so
-    importing this module never initializes a JAX backend."""
-    return _padded_runner_2d(_supports_donation())(
-        xp, spec, total_t, t=t, height=height, width=width, bh=bh,
-        mode=mode, num_buffers=num_buffers, interpret=interpret)
+    prog = compile_stencil(spec, x.shape, dtype=x.dtype, t=depth, hw=hw,
+                           plan=plan, mode=mode, interpret=interpret,
+                           boundary=boundary)
+    return prog.run(x, total_t)

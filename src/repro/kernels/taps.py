@@ -261,3 +261,84 @@ class TapEngine:
 def engine_for(taps: Taps, ndim: int) -> TapEngine:
     """Memoized engine per (taps, ndim) — specs are hashable frozen tuples."""
     return TapEngine(taps, ndim)
+
+
+# ------------------------------------------------------------ boundaries ----
+# The engine's zero-fill slicing realizes exactly one boundary condition:
+# zero Dirichlet.  Everything else is reduced to it here, shared by the
+# Pallas kernels and the oracle (the ``Boundary`` objects handed in are
+# duck-typed: anything with ``.kind``/``.value`` — see repro.api.boundary).
+
+def is_zero_dirichlet(boundary) -> bool:
+    return (boundary is None
+            or (boundary.kind == "dirichlet" and boundary.value == 0.0))
+
+
+def check_boundary(taps: Taps, boundary) -> None:
+    """Raise ``ValueError`` when ``taps`` cannot run under ``boundary``
+    through the zero-Dirichlet reductions below.
+
+    * dirichlet(v≠0) needs ``sum(coeffs) == 1``: the shift identity
+      ``u_t = Z_t(u_0 − v) + v`` holds iff a constant field is a fixed
+      point of one step.
+    * reflect needs per-axis mirror symmetry of the tap set: only then is
+      the mirror extension preserved by evolution, making the one-time
+      deep-halo ghost fill equivalent to re-mirroring every step.
+    """
+    if is_zero_dirichlet(boundary) or boundary.kind == "periodic":
+        return
+    if boundary.kind == "dirichlet":
+        s = sum(c for _, c in taps)
+        if abs(s - 1.0) > 1e-6:
+            raise ValueError(
+                f"non-zero Dirichlet needs taps summing to 1 (got {s:.6g}): "
+                "the constant-shift reduction to the zero-Dirichlet kernels "
+                "is exact only for normalized (Jacobi) tap sets")
+        return
+    if boundary.kind == "reflect":
+        coeff = dict(taps)
+        for off, c in taps:
+            for a in range(len(off)):
+                m = tuple(-o if i == a else o for i, o in enumerate(off))
+                if abs(coeff.get(m, 0.0) - c) > 1e-9:
+                    raise ValueError(
+                        f"reflect boundary needs a mirror-symmetric tap set; "
+                        f"tap {off} (coeff {c:g}) has no axis-{a} mirror")
+        return
+    raise ValueError(f"unknown boundary kind {boundary.kind!r}")
+
+
+def ghost_extend(x: jnp.ndarray, ndim: int, halo: int,
+                 boundary) -> jnp.ndarray:
+    """Extend the last ``ndim`` axes of ``x`` by ``halo`` ghost cells per
+    side, filled by the boundary rule (constant / wrap / mirror).  Leading
+    axes (e.g. a batch) pass through unpadded."""
+    pad = [(0, 0)] * (x.ndim - ndim) + [(halo, halo)] * ndim
+    if boundary.kind == "dirichlet":
+        return jnp.pad(x, pad, constant_values=boundary.value)
+    mode = {"periodic": "wrap", "reflect": "reflect"}[boundary.kind]
+    return jnp.pad(x, pad, mode=mode)
+
+
+def with_boundary(x: jnp.ndarray, ndim: int, halo: int, boundary, core):
+    """Run ``core`` — a zero-Dirichlet ``t``-step map over the last
+    ``ndim`` axes — under ``boundary``, where ``halo`` is the ``t·rad``
+    reach of the chain ``core`` applies.
+
+    dirichlet(v): the exact constant shift (no extra traffic at all).
+    periodic/reflect: deep-halo ghost pinning — extend by ``halo``
+    boundary-true cells, run ``core`` on the extended domain (its
+    zero-fill corruption stays inside the ghost ring for ``t`` steps),
+    crop the domain back out.  Caller is responsible for
+    ``check_boundary`` having passed.
+    """
+    if is_zero_dirichlet(boundary):
+        return core(x)
+    if boundary.kind == "dirichlet":
+        v = jnp.asarray(boundary.value, x.dtype)
+        return core(x - v) + v
+    xe = ghost_extend(x, ndim, halo, boundary)
+    ye = core(xe)
+    crop = (Ellipsis,) + tuple(slice(halo, halo + n)
+                               for n in x.shape[x.ndim - ndim:])
+    return ye[crop]

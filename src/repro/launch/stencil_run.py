@@ -1,8 +1,14 @@
 """Stencil driver: run the paper's suite end-to-end (single- or multi-device).
 
+Quick start (the three-line compile→run flow):
+
+    from repro.api import Boundary, compile_stencil
+    prog = compile_stencil(spec, x.shape, t=4, boundary=Boundary.periodic())
+    y = prog.run(x, T=64)         # 64 steps as chained zero-copy sweeps
+
 ``--distributed`` shards the domain over the host mesh and uses the deep-halo
-communication-avoiding schedule; otherwise the Pallas kernels run directly
-(interpret mode on CPU)."""
+communication-avoiding schedule; otherwise the compiled program drives the
+Pallas kernels (interpret mode on CPU)."""
 from __future__ import annotations
 
 import argparse
@@ -11,39 +17,54 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import roofline as rl
-from repro.core.planner import plan as make_plan
+from repro.api import Boundary, compile_stencil
 from repro.core.stencil_spec import TABLE2, get
-from repro.kernels import ops, ref, sweep
+from repro.kernels import ref
 from repro.stencils.data import init_domain, reduced_domain
 
 
+def parse_boundary(text: str) -> Boundary:
+    """'dirichlet[:v]' | 'periodic' | 'reflect' → Boundary."""
+    kind, _, val = text.partition(":")
+    if kind == "dirichlet":
+        return Boundary.dirichlet(float(val) if val else 0.0)
+    if kind == "periodic":
+        return Boundary.periodic()
+    if kind == "reflect":
+        return Boundary.reflect()
+    raise argparse.ArgumentTypeError(
+        f"unknown boundary {text!r}; use dirichlet[:v] | periodic | reflect")
+
+
 def run_single(name: str, *, t: int | None = None, scale: int = 64,
-               check: bool = True):
+               boundary: Boundary | None = None, check: bool = True):
     spec = get(name)
-    eplan = make_plan(spec, rl.TPU_V5E)
-    depth = t or min(eplan.t, 6)
     shape = reduced_domain(spec, scale)
+    boundary = boundary or Boundary.dirichlet(0.0)
+    prog = compile_stencil(spec, shape, boundary=boundary, interpret=True)
+    depth = t or min(prog.t, 6)
     x = init_domain(spec, shape)
     t0 = time.time()
-    if depth > eplan.t:
+    if depth > prog.t:
         # deeper than the plan's sweet spot: run T = depth total steps as
-        # plan-depth sweeps through the zero-copy executor instead of one
-        # over-deep sweep (whose halo would eat the tile)
-        y = sweep.run_sweeps(x, spec, depth, plan=eplan, interpret=True)
-        how = f"sweeps={sweep.sweep_schedule(depth, eplan.t)}"
+        # plan-depth sweeps through the program's zero-copy executor
+        # instead of one over-deep sweep (whose halo would eat the tile)
+        y = prog.run(x, depth)
+        how = f"run(T={depth}, t={prog.t})"
     else:
-        y = ops.ebisu_stencil(x, spec, depth, plan=eplan, interpret=True)
+        y = prog.apply(x, t=depth)
         how = "single-sweep"
     y.block_until_ready()
     dt = time.time() - t0
+    plan = prog.plan
     line = (f"[stencil] {name:11s} domain={shape} t={depth} {how} "
-            f"plan(t={eplan.t}, tile={eplan.block}, "
-            f"lazy_batch={eplan.lazy_batch}, "
-            f"buffers={eplan.parallelism.num_buffers}) "
+            f"boundary={boundary!r} "
+            f"plan(t={plan.t}, tile={plan.block}, "
+            f"lazy_batch={plan.lazy_batch}, "
+            f"buffers={plan.parallelism.num_buffers}) "
             f"{dt*1e3:.0f}ms")
     if check:
-        want = ref.reference(x, spec, depth)
+        want = ref.reference(x, spec, depth, boundary=boundary)
         err = float(jnp.abs(y - want).max())
         line += f" maxerr={err:.2e}"
         assert err < 1e-4
@@ -81,11 +102,27 @@ def run_distributed(name: str, *, t_total: int = 4, t_block: int = 2,
     return y
 
 
+QUICKSTART = """\
+quick start (compile once, run many):
+  from repro.api import Boundary, compile_stencil
+  prog = compile_stencil(get("j2d5pt"), x.shape, t=6,
+                         boundary=Boundary.periodic())
+  y = prog.run(x, T=64)     # or prog.apply(x) / prog.run_batched(xs, T)
+
+legacy ops.ebisu_stencil / sweep.run_sweeps are deprecated shims over
+compiled programs (policy in README.md)."""
+
+
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog=QUICKSTART,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--stencil", default="all")
     ap.add_argument("--t", type=int, default=None)
     ap.add_argument("--scale", type=int, default=64)
+    ap.add_argument("--boundary", type=parse_boundary, default=None,
+                    metavar="dirichlet[:v]|periodic|reflect",
+                    help="boundary condition (default zero Dirichlet)")
     ap.add_argument("--distributed", action="store_true")
     args = ap.parse_args()
     names = list(TABLE2) if args.stencil == "all" else args.stencil.split(",")
@@ -93,7 +130,8 @@ def main():
         if args.distributed:
             run_distributed(n, scale=args.scale)
         else:
-            run_single(n, t=args.t, scale=args.scale)
+            run_single(n, t=args.t, scale=args.scale,
+                       boundary=args.boundary)
 
 
 if __name__ == "__main__":

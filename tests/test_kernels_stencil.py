@@ -154,17 +154,31 @@ def test_ebisu3d_planner_depth(spec):
 @pytest.mark.parametrize("spec", SPECS_3D, ids=lambda s: s.name)
 def test_ebisu3d_xy_tiled_matches_untiled(spec):
     """XY-tiled launch == untiled launch == oracle on a domain larger than
-    one tile (corner rim views exercised by the box stencils)."""
-    from repro.kernels.stencil3d import ebisu3d, launch_geometry_3d
+    one tile (corner rim views exercised by the box stencils).  Both
+    launches go through the program front door with pinned plans — the
+    sole dispatch path."""
+    import dataclasses
+
+    from repro.api import compile_stencil
+    from repro.kernels.stencil3d import launch_geometry_3d
 
     t = 2
     halo = spec.halo(t)
     shape = (3 * halo + 5, 4 * halo + 3, 4 * halo + 6)
     x = init_domain(spec, shape)
     want = ref.reference_unrolled(x, spec, t)
-    untiled = ebisu3d(x, spec, t, zc=halo, interpret=True)
-    tiled = ebisu3d(x, spec, t, zc=halo, ty=2 * halo, tx=2 * halo,
-                    interpret=True)
+    base = _plan_for(spec)
+
+    def pinned(ty, tx):          # a tile >= the extent leaves the axis untiled
+        return dataclasses.replace(base, t=t, halo=halo, lazy_batch=halo,
+                                   block=(halo, ty, tx))
+
+    untiled = compile_stencil(
+        spec, shape, t=t, interpret=True,
+        plan=pinned(shape[1], shape[2])).apply(x)
+    tiled = compile_stencil(
+        spec, shape, t=t, interpret=True,
+        plan=pinned(2 * halo, 2 * halo)).apply(x)
     g = launch_geometry_3d(spec, t, shape, zc=halo, ty=2 * halo,
                            tx=2 * halo)
     assert g["grid"][1] > 1 and g["grid"][2] > 1, g

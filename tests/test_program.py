@@ -1,0 +1,366 @@
+"""The compile-once front door: ``StencilProgram`` semantics, first-class
+boundary conditions vs an independent jnp.roll/pad oracle, batched
+execution, the bounded ``ProgramCache``, and the deprecation shims."""
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (Boundary, ProgramCache, cache_stats, compile_stencil,
+                       resolve_geometry)
+from repro.core.stencil_spec import TABLE2, get
+from repro.kernels import ops, ref, sweep
+from repro.stencils.data import init_domain
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ALL_SPECS = list(TABLE2.values())
+BOUNDARIES = [Boundary.periodic(), Boundary.reflect(),
+              Boundary.dirichlet(0.7)]
+
+
+def small_shape(spec):
+    return (27, 22) if spec.ndim == 2 else (12, 9, 11)
+
+
+# ------------------------------------------------ independent oracle -------
+# Deliberately NOT the tap engine: periodic via jnp.roll, dirichlet/reflect
+# via a jnp.pad ghost ring and hand-written tap slices.
+
+def oracle_step(x, spec, b):
+    nd = spec.ndim
+    if b.kind == "periodic":
+        acc = jnp.zeros_like(x)
+        for off, c in spec.taps:
+            acc = acc + c * jnp.roll(x, tuple(-o for o in off),
+                                     axis=tuple(range(nd)))
+        return acc
+    rad = spec.radius
+    if b.kind == "dirichlet":
+        xe = jnp.pad(x, rad, constant_values=b.value)
+    else:
+        xe = jnp.pad(x, rad, mode="reflect")
+    acc = jnp.zeros_like(x)
+    for off, c in spec.taps:
+        sl = tuple(slice(rad + o, rad + o + n)
+                   for o, n in zip(off, x.shape))
+        acc = acc + c * xe[sl]
+    return acc
+
+
+def oracle(x, spec, t, b):
+    for _ in range(t):
+        x = oracle_step(x, spec, b)
+    return x
+
+
+# ===================================================== boundary programs ==
+@pytest.mark.parametrize("boundary", BOUNDARIES, ids=lambda b: b.kind)
+@pytest.mark.parametrize("t", [1, 2, 4])
+@pytest.mark.parametrize("spec", ALL_SPECS, ids=lambda s: s.name)
+def test_boundary_program_matches_oracle(spec, t, boundary):
+    """All nine Table-2 specs under periodic / reflect / Dirichlet(0.7)
+    match the independent roll/pad oracle through the compiled program."""
+    x = init_domain(spec, small_shape(spec))
+    prog = compile_stencil(spec, x.shape, t=t, boundary=boundary,
+                           interpret=True)
+    got = prog.apply(x)
+    want = oracle(x, spec, t, boundary)
+    err = float(jnp.abs(got - want).max())
+    assert err < 1e-4, (spec.name, t, boundary, err)
+
+
+@pytest.mark.parametrize("boundary", BOUNDARIES, ids=lambda b: b.kind)
+def test_boundary_executor_matches_oracle(boundary):
+    """The multi-sweep executor (remainder sweep included) re-pins the
+    boundary correctly — T steps == T oracle steps."""
+    for name in ("j2d9pt", "j3d7pt"):
+        spec = get(name)
+        x = init_domain(spec, small_shape(spec))
+        prog = compile_stencil(spec, x.shape, t=3, boundary=boundary,
+                               interpret=True)
+        got = prog.run(x, 7)                 # 3 + 3 + 1 remainder
+        want = oracle(x, spec, 7, boundary)
+        err = float(jnp.abs(got - want).max())
+        assert err < 1e-4, (name, boundary, err)
+
+
+def test_boundary_reference_oracle_agrees():
+    """ref.reference(boundary=...) (the in-repo oracle the kernels share
+    machinery with) agrees with the independent roll/pad oracle."""
+    for b in BOUNDARIES:
+        for name in ("j2d25pt", "j3d27pt"):
+            spec = get(name)
+            x = init_domain(spec, small_shape(spec))
+            got = ref.reference_unrolled(x, spec, 3, boundary=b)
+            want = oracle(x, spec, 3, b)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       atol=1e-5, rtol=1e-5)
+
+
+def test_boundary_validation_errors():
+    spec2 = get("j2d5pt")
+    with pytest.raises(ValueError, match="kind"):
+        Boundary("torus")
+    with pytest.raises(ValueError, match="no value"):
+        Boundary("periodic", 1.0)
+    # non-normalized taps cannot take the Dirichlet constant-shift path
+    import dataclasses
+    bad = dataclasses.replace(spec2, name="unnorm",
+                              taps=tuple((o, 2 * c) for o, c in spec2.taps))
+    with pytest.raises(ValueError, match="summing to 1"):
+        compile_stencil(bad, (16, 16), t=1,
+                        boundary=Boundary.dirichlet(0.5))
+    # mirror-asymmetric taps cannot run reflect exactly
+    asym = dataclasses.replace(
+        spec2, name="asym",
+        taps=(((0, 0), 0.5), ((0, 1), 0.3), ((0, -1), 0.2)))
+    with pytest.raises(ValueError, match="mirror"):
+        compile_stencil(asym, (16, 16), t=1, boundary=Boundary.reflect())
+    # ...but they run fine under zero Dirichlet and periodic
+    x = init_domain(spec2, (16, 16))
+    for b in (None, Boundary.periodic()):
+        compile_stencil(asym, (16, 16), t=2, boundary=b,
+                        interpret=True).apply(x)
+
+
+# ========================================================== program API ==
+def test_program_apply_and_run_match_reference():
+    spec = get("j2d5pt")
+    x = init_domain(spec, (97, 83))
+    prog = compile_stencil(spec, x.shape, t=6, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(prog.apply(x)),
+        np.asarray(ref.reference_unrolled(x, spec, 6)),
+        atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(                  # 25 = 6+6+6+6+1 remainder
+        np.asarray(prog.run(x, 25)),
+        np.asarray(ref.reference_unrolled(x, spec, 25)),
+        atol=1e-4, rtol=1e-4)
+    assert prog.run(x, 0) is x
+
+
+def test_program_apply_depth_override():
+    spec = get("j3d7pt")
+    x = init_domain(spec, (14, 9, 11))
+    prog = compile_stencil(spec, x.shape, t=4, interpret=True)
+    got = prog.apply(x, t=2)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.reference_unrolled(x, spec, 2)),
+        atol=1e-4, rtol=1e-4)
+
+
+def test_run_batched_equals_loop_over_run():
+    """The one-vmapped-runner batched path == a Python loop of .run —
+    2-D and 3-D, including a boundary that needs per-sweep re-pinning."""
+    cases = [("j2d5pt", (33, 29), None), ("j3d7pt", (12, 9, 11), None),
+             ("j2d9pt", (24, 21), Boundary.periodic())]
+    for name, shape, boundary in cases:
+        spec = get(name)
+        xs = jnp.stack([init_domain(spec, shape, seed=i) for i in range(3)])
+        prog = compile_stencil(spec, shape, t=3, boundary=boundary,
+                               interpret=True)
+        got = prog.run_batched(xs, 7)
+        assert got.shape == xs.shape
+        for i in range(xs.shape[0]):
+            np.testing.assert_allclose(
+                np.asarray(got[i]), np.asarray(prog.run(xs[i], 7)),
+                atol=1e-5, rtol=1e-5, err_msg=f"{name} batch elem {i}")
+
+
+def test_run_padded_donated_carry_matches_run():
+    from repro.kernels.stencil2d import padded_shape_2d
+
+    spec = get("j2d5pt")
+    shape = (45, 70)
+    x = init_domain(spec, shape)
+    prog = compile_stencil(spec, shape, t=3, interpret=True)
+    bh = prog.geometry()["block"][0]
+    hp, wp = padded_shape_2d(spec, 3, bh, *shape)
+    xp = jnp.zeros((hp, wp), jnp.float32).at[:shape[0], :shape[1]].set(x)
+    out = prog.run_padded(xp, 9)
+    np.testing.assert_allclose(
+        np.asarray(out)[:shape[0], :shape[1]],
+        np.asarray(prog.run(x, 9)), atol=1e-5, rtol=1e-5)
+    # not available off the 2-D zero-Dirichlet fast path
+    p3 = compile_stencil(get("j3d7pt"), (12, 9, 11), t=2, interpret=True)
+    with pytest.raises(ValueError, match="padded-carry"):
+        p3.run_padded(xp, 4)
+
+
+def test_program_shape_mismatch_raises():
+    spec = get("j2d5pt")
+    prog = compile_stencil(spec, (32, 32), t=2, interpret=True)
+    with pytest.raises(ValueError, match="compiled for shape"):
+        prog.apply(init_domain(spec, (16, 16)))
+    with pytest.raises(ValueError, match="compiled for shape"):
+        prog.run_batched(init_domain(spec, (32, 32)))   # missing batch axis
+    with pytest.raises(ValueError):
+        compile_stencil(spec, (32, 32, 32))             # 3-D shape, 2-D spec
+
+
+def test_compile_validates_mode_and_depth():
+    """A typo'd mode or a degenerate depth fails loudly at compile/call
+    time with a clear message, not deep inside kernel geometry."""
+    spec = get("j2d5pt")
+    with pytest.raises(ValueError, match="unknown mode"):
+        compile_stencil(spec, (32, 32), t=2, mode="scrtch")
+    with pytest.raises(ValueError, match="unknown mode"):
+        compile_stencil(get("j3d7pt"), (12, 9, 11), t=2, mode="stream")
+    with pytest.raises(ValueError, match="depth must be >= 1"):
+        compile_stencil(spec, (32, 32), t=0)
+    prog = compile_stencil(spec, (32, 32), t=2, interpret=True)
+    with pytest.raises(ValueError, match="depth must be >= 1"):
+        prog.apply(init_domain(spec, (32, 32)), t=0)
+    stream = compile_stencil(spec, (32, 32), t=2, mode="stream",
+                             interpret=True)
+    with pytest.raises(ValueError, match="padded-carry"):
+        stream.run_padded(jnp.zeros((64, 128)), 4)
+
+
+def test_program_memoized_and_distinct():
+    spec = get("j2d5pt")
+    a = compile_stencil(spec, (48, 40), t=4, interpret=True)
+    b = compile_stencil(spec, (48, 40), t=4, interpret=True)
+    assert a is b
+    c = compile_stencil(spec, (48, 40), t=4, interpret=True,
+                        boundary=Boundary.periodic())
+    assert c is not a
+
+
+def test_program_geometry_and_cost():
+    spec = get("j3d7pt")
+    prog = compile_stencil(spec, (32, 24, 32), t=4, interpret=True)
+    g = prog.geometry()
+    assert g["block"][0] >= spec.halo(4)
+    assert g["fetched_cells"] > g["body_cells"] > 0
+    # the sole geometry path: the legacy shim resolves identical geometry
+    assert g == ops.launch_geometry(spec, 4, (32, 24, 32), plan=prog.plan)
+    assert prog.cost(prog.plan.t).pp_cells_per_s == prog.plan.pp.pp_cells_per_s
+    assert prog.cost(1).pp_cells_per_s > 0
+    # re-pinning boundaries compute a ghost-extended domain
+    pb = compile_stencil(spec, (32, 24, 32), t=4, interpret=True,
+                         boundary=Boundary.periodic())
+    assert pb.compute_shape() == tuple(n + 2 * spec.halo(4)
+                                       for n in (32, 24, 32))
+    stats = prog.cache_stats()
+    assert {"programs", "plans", "runners"} <= set(stats)
+
+
+# ========================================================= ProgramCache ==
+def test_program_cache_lru_and_counters():
+    c = ProgramCache(maxsize=2, name="t")
+    assert c.get("a") is None and c.misses == 1
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1                 # refreshes a
+    c.put("d", 4)                          # evicts b (LRU)
+    assert "b" not in c and "a" in c and len(c) == 2
+    assert c.get("b", "gone") == "gone"
+    s = c.stats()
+    assert s["hits"] == 1 and s["misses"] == 2 and s["size"] == 2
+    assert c.get_or_build("e", lambda: 5) == 5
+    assert c.get_or_build("e", lambda: 99) == 5
+    c.clear()
+    assert len(c) == 0
+
+    with pytest.raises(ValueError):
+        ProgramCache(maxsize=0)
+
+
+def test_global_caches_exposed_and_bounded():
+    stats = cache_stats()
+    for name in ("programs", "plans", "runners"):
+        assert stats[name]["size"] <= stats[name]["maxsize"]
+    # the legacy sweep module aliases the bounded caches, not dicts
+    assert isinstance(sweep._LAUNCH_CACHE, ProgramCache)
+    assert isinstance(sweep._PLAN_CACHE, ProgramCache)
+
+
+def test_plan_bucketed_delegates_to_cache():
+    spec = get("j2d9pt")
+    before = sweep._PLAN_CACHE.stats()["misses"]
+    p1 = sweep.plan_bucketed(spec, (130, 70))
+    p2 = sweep.plan_bucketed(spec, (150, 90))   # same 64-bucket: (192, 128)
+    assert p1 is p2
+    assert sweep._PLAN_CACHE.stats()["misses"] <= before + 1
+
+
+# ================================================================ shims ==
+def test_legacy_shims_warn_and_match():
+    spec = get("j2d5pt")
+    x = init_domain(spec, (40, 36))
+    prog = compile_stencil(spec, x.shape, t=3, plan=None, interpret=True)
+    with pytest.warns(DeprecationWarning, match="ebisu_stencil"):
+        legacy = ops.ebisu_stencil(x, spec, 3, interpret=True)
+    np.testing.assert_allclose(np.asarray(legacy),
+                               np.asarray(prog.apply(x)), atol=0, rtol=0)
+    with pytest.warns(DeprecationWarning, match="run_sweeps"):
+        legacy = sweep.run_sweeps(x, spec, 7, t=3, interpret=True)
+    np.testing.assert_allclose(np.asarray(legacy),
+                               np.asarray(prog.run(x, 7)),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_planned_shim_threads_mode_and_hw():
+    """The seed's ebisu_stencil_planned silently dropped mode= (always
+    fused); it now routes through the program front door."""
+    from repro.core import roofline as rl
+
+    spec = get("j2d9pt")
+    x = init_domain(spec, (40, 36))
+    with pytest.warns(DeprecationWarning):
+        y_scratch, p = ops.ebisu_stencil_planned(
+            x, spec, t=2, mode="scratch", interpret=True)
+    assert p is not None
+    np.testing.assert_allclose(
+        np.asarray(y_scratch),
+        np.asarray(ref.reference_unrolled(x, spec, 2)),
+        atol=1e-4, rtol=1e-4)
+    with pytest.warns(DeprecationWarning):
+        _, p_a100 = ops.ebisu_stencil_planned(
+            x, spec, t=2, hw=rl.A100_FP64, interpret=True)
+    assert p_a100.hw_name == rl.A100_FP64.name
+
+
+def test_resolve_geometry_is_sole_path():
+    """ops.launch_geometry is a pure delegate of api.resolve_geometry."""
+    spec = get("j2d5pt")
+    for mode in ("fused", "stream"):
+        assert (ops.launch_geometry(spec, 4, (96, 80), mode=mode)
+                == resolve_geometry(spec, 4, (96, 80), mode=mode))
+
+
+def test_bench_min_merge():
+    """--passes N keeps each row's minimum with that pass's derived
+    column, preserving row order of first appearance."""
+    sys.path.insert(0, _ROOT)
+    try:
+        from benchmarks.run import min_merge
+    finally:
+        sys.path.remove(_ROOT)
+    merged = min_merge([[("a", 10.0, "d1"), ("b", 5.0, "x")],
+                        [("a", 7.0, "d2"), ("c", 1.0, "y")],
+                        [("a", 9.0, "d3")]])
+    assert merged == [("a", 7.0, "d2"), ("b", 5.0, "x"), ("c", 1.0, "y")]
+
+
+# ======================================================= import hygiene ==
+def test_api_import_initializes_no_backend():
+    """`import repro.api` must stay backend-free: programs answer backend
+    questions at compile time, never at import time (tier1.sh gate)."""
+    code = (
+        "import repro.api\n"
+        "from jax._src import xla_bridge\n"
+        "assert not getattr(xla_bridge, '_backends', {}), "
+        "'repro.api import initialized a JAX backend'\n"
+        "print('clean')\n"
+    )
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(_ROOT, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=120)
+    assert r.returncode == 0 and "clean" in r.stdout, r.stderr
