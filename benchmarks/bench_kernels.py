@@ -23,7 +23,7 @@ from __future__ import annotations
 import warnings
 
 from benchmarks.common import time_fn, time_pair
-from repro.api import compile_stencil
+from repro.api import compile_stencil, define_stencil
 from repro.core.stencil_spec import StencilSpec, get
 from repro.kernels import ops, sweep
 from repro.stencils.data import init_domain
@@ -62,6 +62,13 @@ PROGRAM_CASES = (("j2d5pt", (256, 256), 6),
                  ("j3d7pt", (32, 24, 32), 4))
 
 BATCH_CASE = ("j2d5pt", (128, 128), 4, 12, 4)   # name, shape, t, T, batch
+
+# A user-defined spec through the open definition layer (no registry, no
+# Table-2 numbers): the anisotropic unnormalized 2-D 5-point.  Tracks that
+# define_stencil programs pay no toll vs registry specs of the same shape.
+CUSTOM_CASE = (define_stencil(
+    (((0, 0), 0.55), ((0, 1), 0.2), ((0, -1), 0.1),
+     ((1, 0), 0.08), ((-1, 0), 0.04)), name="aniso5"), (256, 256), 6)
 
 
 def _program_rows():
@@ -102,6 +109,22 @@ def _program_rows():
                     f"looped_us={us_looped:.0f}|"
                     f"speedup={us_looped / us_batched:.2f}x|"
                     f"note=one-vmapped-dispatch-vs-python-loop-of-run"))
+
+        # user-defined spec (open definition layer) vs the registry spec
+        # of the same tap shape at the same tile/depth
+        cspec, cshape, ct = CUSTOM_CASE
+        xc = init_domain(cspec, cshape)
+        cprog = compile_stencil(cspec, cshape, t=ct, plan=None,
+                                interpret=True)
+        rprog = compile_stencil(get("j2d5pt"), cshape, t=ct, plan=None,
+                                interpret=True)
+        cprog.apply(xc), rprog.apply(xc)        # compile outside timing
+        us_custom, us_reg = time_pair(lambda: cprog.apply(xc),
+                                      lambda: rprog.apply(xc))
+        out.append((f"custom/{cspec.name}-t{ct}", us_custom,
+                    f"registry_j2d5pt_us={us_reg:.0f}|"
+                    f"overhead={us_custom / us_reg - 1:+.1%}|"
+                    f"note=define_stencil-vs-registry-same-shape"))
     return out
 
 

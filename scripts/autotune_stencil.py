@@ -10,6 +10,10 @@ Usage:
     PYTHONPATH=src python scripts/autotune_stencil.py \
         [--stencil j2d5pt,j3d7pt] [--scale 64] [--depths 1,2,4,6] \
         [--json autotune.json]
+    # user-defined stencils tune through the same pipeline (no registry):
+    PYTHONPATH=src python scripts/autotune_stencil.py \
+        --taps '[[[0,0],0.6],[[0,1],0.1],[[0,-1],0.1],[[1,0],0.1],[[-1,0],0.1]]'
+    PYTHONPATH=src python scripts/autotune_stencil.py --spec-json my.json
 
 The cross-check is advisory on CPU (interpret-mode wall time is a proxy,
 not v5e time): the planner optimizes the §5 model, the sweep measures the
@@ -28,7 +32,8 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 import dataclasses  # noqa: E402
 
 from benchmarks.common import time_fn  # noqa: E402
-from repro.api import compile_stencil
+from repro.api import (compile_stencil, define_stencil, parse_taps,
+                       spec_from_json)
 from repro.core import roofline as rl
 from repro.core.planner import plan
 from repro.core.stencil_spec import TABLE2, get
@@ -45,8 +50,10 @@ def _pinned(p, spec, t: int, tile: int):
         lazy_batch=min(p.lazy_batch, tile))
 
 
-def sweep_one(name: str, scale: int, depths: list[int]):
-    spec = get(name)
+def sweep_one(spec_or_name, scale: int, depths: list[int]):
+    spec = (get(spec_or_name) if isinstance(spec_or_name, str)
+            else spec_or_name)
+    name = spec.name
     shape = reduced_domain(spec, scale)
     x = init_domain(spec, shape)
     p = plan(spec, rl.TPU_V5E)
@@ -81,24 +88,39 @@ def sweep_one(name: str, scale: int, depths: list[int]):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--stencil", default="all")
+    ap.add_argument("--taps", default=None,
+                    help="autotune a custom stencil from a JSON tap list")
+    ap.add_argument("--spec-json", default=None,
+                    help="autotune a custom stencil from a JSON spec file")
+    ap.add_argument("--normalize", action="store_true",
+                    help="rescale --taps coefficients to sum to 1")
     ap.add_argument("--scale", type=int, default=64)
     ap.add_argument("--depths", default="1,2,4")
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
-    names = list(TABLE2) if args.stencil == "all" else args.stencil.split(",")
-    unknown = [n for n in names if n not in TABLE2]
-    if unknown:
-        ap.error(f"unknown stencil(s) {unknown}; choose from {list(TABLE2)}")
+    if args.taps or args.spec_json:
+        specs = [define_stencil(parse_taps(args.taps),
+                                normalize=args.normalize)
+                 if args.taps else spec_from_json(args.spec_json)]
+    else:
+        names = (list(TABLE2) if args.stencil == "all"
+                 else args.stencil.split(","))
+        unknown = [n for n in names if n not in TABLE2]
+        if unknown:
+            ap.error(f"unknown stencil(s) {unknown}; choose from "
+                     f"{list(TABLE2)} — or pass --taps/--spec-json for a "
+                     "custom stencil")
+        specs = [get(n) for n in names]
     depths = [int(d) for d in args.depths.split(",")]
 
     results = []
-    for name in names:
-        res = sweep_one(name, args.scale, depths)
+    for spec in specs:
+        res = sweep_one(spec, args.scale, depths)
         results.append(res)
         b, p = res["best"], res["planner"]
         agree_depth = b["t"] >= max(1, p["t"] // 2) or b["t"] == max(
             r["t"] for r in res["sweep"])
-        print(f"[autotune] {name:11s} best: t={b['t']} tile={b['tile']} "
+        print(f"[autotune] {res['stencil']:11s} best: t={b['t']} tile={b['tile']} "
               f"mode={b['mode']} {b['us_per_step']:.0f}us/step | "
               f"planner: t={p['t']} tile={p['tile']} "
               f"lazy_batch={p['lazy_batch']} "

@@ -1,30 +1,42 @@
 """Public compile-once API for the EBISU temporal-blocking kernels.
 
-    from repro.api import Boundary, compile_stencil
+    from repro.api import Boundary, compile_stencil, define_stencil
+    spec = define_stencil([((0, 0), 0.6), ((0, 1), 0.1), ...])  # any taps
     prog = compile_stencil(spec, shape, t=4, boundary=Boundary.periodic())
     y = prog.run(x, T=64)
 
-See README.md for the full quick-start and the deprecation policy for
-the legacy entry points (``ops.ebisu_stencil``, ``sweep.run_sweeps``).
-Importing this package never initializes a JAX backend (checked by
-``scripts/tier1.sh``).
+The definition layer is open: ``define_stencil`` / ``from_operator``
+build arbitrary user stencils with derived cost models; the Table-2
+registry (``repro.core.stencil_spec.get``) is just nine pre-built specs
+with the paper's published numbers pinned as overrides.  See README.md
+for the quick-start and the deprecation policy for the legacy entry
+points (``ops.ebisu_stencil``, ``sweep.run_sweeps``).  Importing this
+package never initializes a JAX backend (checked by ``scripts/tier1.sh``).
 """
 from repro.api.boundary import Boundary
+from repro.api.define import from_operator, parse_taps, spec_from_json
 from repro.api.program import (ProgramCache, StencilProgram, cache_stats,
                                clear_caches, compile_stencil, plan_bucketed,
-                               resolve_geometry, run_sweeps_padded,
-                               sweep_once, sweep_schedule)
+                               resolve_compute_dtype, resolve_geometry,
+                               run_sweeps_padded, sweep_once, sweep_schedule)
+from repro.core.stencil_spec import StencilSpec, define_stencil
 
 __all__ = [
     "Boundary",
     "ProgramCache",
     "StencilProgram",
+    "StencilSpec",
     "cache_stats",
     "clear_caches",
     "compile_stencil",
+    "define_stencil",
+    "from_operator",
+    "parse_taps",
     "plan_bucketed",
+    "resolve_compute_dtype",
     "resolve_geometry",
     "run_sweeps_padded",
+    "spec_from_json",
     "sweep_once",
     "sweep_schedule",
 ]

@@ -10,10 +10,13 @@ with three kinds:
     constant ``v`` at every step.  ``v = 0`` is the seed semantics and
     the fast path (the padded layout is closed under it, DESIGN.md §9.3).
     ``v ≠ 0`` is run *exactly* through the zero-Dirichlet kernels via the
-    shift identity ``u_t = Z_t(u_0 − v) + v`` (``Z_t`` = t zero-Dirichlet
-    steps), valid because every Table-2 tap set is normalized to sum 1 —
-    a constant field is a fixed point, so subtracting ``v`` turns
-    constant-``v`` ghosts into zero ghosts.  Checked at compile time.
+    affine closure ``u_t = Z_t(u_0 − v) + v·s^t`` (``Z_t`` = t
+    zero-Dirichlet steps, ``s`` = tap sum — DESIGN.md §11.3), which is
+    exact when ``s = 1`` (normalized sets: a constant field is a fixed
+    point, so the classic constant shift holds at any depth) or when the
+    chain is one step deep (``t = 1`` sweeps, re-shifted per sweep — how
+    unnormalized user stencils run).  Checked at compile time; other
+    (s ≠ 1, t ≥ 2) combinations fail with the fixes spelled out.
   * ``Boundary.periodic()`` — the domain wraps (torus).  Executed by
     deep-halo ghost pinning: extend the field by ``halo = t·rad`` wrapped
     cells, run the zero-Dirichlet kernel on the extended domain, crop.
@@ -84,11 +87,12 @@ class Boundary:
     def is_zero_dirichlet(self) -> bool:
         return self.kind == "dirichlet" and self.value == 0.0
 
-    def validate_for(self, spec) -> None:
-        """Raise ``ValueError`` if ``spec`` cannot run under this boundary
-        exactly (non-unit tap sum for non-zero Dirichlet; non-mirror-
-        symmetric taps for reflect)."""
-        check_boundary(spec.taps, self)
+    def validate_for(self, spec, t: int | None = None) -> None:
+        """Raise ``ValueError`` if a ``t``-step chain of ``spec`` cannot
+        run under this boundary exactly (the affine Dirichlet closure
+        needs unit tap sum OR depth-1 sweeps for a non-zero value;
+        reflect needs mirror-symmetric taps — DESIGN.md §11.3)."""
+        check_boundary(spec.taps, self, t)
 
     def __repr__(self) -> str:  # compact, key-friendly
         if self.kind == "dirichlet":

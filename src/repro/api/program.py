@@ -49,13 +49,14 @@ from repro.api.boundary import ZERO, Boundary
 from repro.core import roofline as rl
 from repro.core.planner import (EbisuPlan, fit_streaming_batch,
                                 plan as make_plan, vmem_required_2d)
-from repro.core.stencil_spec import StencilSpec, lift_2d_to_3d
+from repro.core.stencil_spec import (StencilSpec, lift_2d_to_3d,
+                                     validate_spec)
 from repro.kernels.stencil2d import (ebisu2d, ebisu2d_padded,
                                      padded_shape_2d, strip_geometry)
 from repro.kernels.stencil3d import (_pad_to, ebisu3d, ebisu3d_padded,
                                      launch_geometry_3d, padded_shape_3d,
                                      xy_tile)
-from repro.kernels.taps import ghost_extend
+from repro.kernels.taps import ghost_extend, tap_sum
 
 # plan-less fallback tiles (the request defaults the legacy entry points
 # used; programs compiled without an explicit plan resolve one instead)
@@ -140,11 +141,14 @@ def clear_caches() -> None:
 
 def plan_bucketed(spec: StencilSpec, shape: tuple[int, ...],
                   hw: rl.HardwareModel = rl.TPU_V5E) -> EbisuPlan:
-    """§6 plan memoized per (spec, 64-rounded domain, hardware) in the
-    bounded ``PLAN_CACHE`` — a simulation loop over near-identical
-    domains plans once per bucket."""
+    """§6 plan memoized per (tap structure, 64-rounded domain, hardware)
+    in the bounded ``PLAN_CACHE`` — a simulation loop over near-identical
+    domains plans once per bucket.  Keyed on ``spec.signature`` (the tap
+    set plus the cost-model numbers), NOT the registry name: user-defined
+    specs plan without any registry lookup, and two differently-named
+    specs with identical structure share one plan."""
     bucket = tuple(_pad_to(d, _BUCKET) for d in shape)
-    key = (spec.name, bucket, hw.name)
+    key = (spec.signature, bucket, hw.name)
     return PLAN_CACHE.get_or_build(
         key, lambda: make_plan(spec, hw, domain=bucket))
 
@@ -202,14 +206,16 @@ def resolve_geometry(spec: StencilSpec, t: int, shape: tuple[int, ...], *,
 def sweep_once(x: jnp.ndarray, spec: StencilSpec, t: int, *,
                plan: EbisuPlan | None = None, mode: str = "fused",
                interpret: bool = True,
-               boundary: Boundary | None = None) -> jnp.ndarray:
+               boundary: Boundary | None = None,
+               compute_dtype=None) -> jnp.ndarray:
     """One temporally-blocked sweep — the sole plan→kernel dispatch path.
 
     When a §6 plan is supplied, its decisions are wired all the way into
     the kernels: tile height/chunk depth (``plan.block``), streaming
     batch (``plan.lazy_batch``) and DMA pipeline depth
     (``plan.parallelism.num_buffers``) — none of the planner's outputs
-    are decorative.
+    are decorative.  ``compute_dtype`` (default float32) is the dtype of
+    the padded compute buffers the kernels run on.
     """
     lazy = plan.lazy_batch if plan is not None else None
     nbuf = plan.parallelism.num_buffers if plan is not None else None
@@ -223,19 +229,25 @@ def sweep_once(x: jnp.ndarray, spec: StencilSpec, t: int, *,
             # The boundary is resolved before lifting (the size-1 lifted
             # axis must not be ghost-extended).
             if b is not None:
-                from repro.kernels.taps import with_boundary
+                from repro.kernels.taps import check_boundary, with_boundary
+                check_boundary(spec.taps, b, t)
                 return with_boundary(
                     x, 2, spec.halo(t), b,
                     lambda v: sweep_once(v, spec, t, plan=plan, mode=mode,
-                                         interpret=interpret))
+                                         interpret=interpret,
+                                         compute_dtype=compute_dtype),
+                    taps=spec.taps, t=t)
             y = ebisu3d(x[:, None, :], lift_2d_to_3d(spec), t,
                         lazy_batch=lazy, num_buffers=nbuf,
-                        interpret=interpret, **req)
+                        interpret=interpret, compute_dtype=compute_dtype,
+                        **req)
             return y[:, 0, :]
         return ebisu2d(x, spec, t, mode=mode, num_buffers=nbuf,
-                       interpret=interpret, boundary=b, **req)
+                       interpret=interpret, boundary=b,
+                       compute_dtype=compute_dtype, **req)
     return ebisu3d(x, spec, t, lazy_batch=lazy, num_buffers=nbuf,
-                   interpret=interpret, boundary=b, **req)
+                   interpret=interpret, boundary=b,
+                   compute_dtype=compute_dtype, **req)
 
 
 # ===================================================== multi-sweep runner ==
@@ -321,22 +333,48 @@ def _supports_donation() -> bool:
 def _build_chain(spec: StencilSpec, shape: tuple[int, ...], dtype,
                  total_t: int, depth: int, plan: EbisuPlan,
                  hw: rl.HardwareModel, mode: str, interpret: bool,
-                 boundary: Boundary):
+                 boundary: Boundary, compute_dtype=None):
     """The multi-sweep schedule as an un-jitted f(x) -> x (DESIGN.md §9.3).
 
     Zero Dirichlet: the zero-copy padded chain — pad once per depth
-    group, chain the padded kernel, crop once.  dirichlet(v): the same
-    chain under the exact constant shift (still zero-copy).
+    group, chain the padded kernel, crop once.  dirichlet(v), normalized
+    taps: the same chain under the exact constant shift (still
+    zero-copy).  dirichlet(v), tap sum s ≠ 1: the affine closure
+    ``u' = Z_1(u − v) + v·s`` re-applied around every (depth-1) sweep —
+    ``check_boundary`` guarantees no deeper sweep reaches this branch.
     periodic/reflect: the padded layout is NOT closed under the boundary,
     so each sweep re-pins the ghost halo from the evolved field and runs
     the zero-Dirichlet core on the extended domain (DESIGN.md §10).
+
+    All compute buffers are ``compute_dtype`` (the program's policy —
+    default float32); only the final result is cast to the program's
+    storage ``dtype``.
     """
     groups = _grouped(sweep_schedule(total_t, depth))
     nbuf = plan.parallelism.num_buffers
     repin = boundary.kind in ("periodic", "reflect")
+    cdtype = jnp.dtype(compute_dtype) if compute_dtype else jnp.float32
+    s = tap_sum(spec.taps)
+    # per-sweep affine re-shift (s != 1): shift inside the sweep loop;
+    # constant shift (s == 1): once around the whole chain (zero-copy)
+    affine = (boundary.kind == "dirichlet" and boundary.value != 0.0
+              and abs(s - 1.0) > 1e-6)
+    shift = boundary.value if boundary.kind == "dirichlet" else 0.0
 
     def halo_of(d: int) -> int:
         return spec.halo(d) if repin else 0
+
+    def pre(v, d):
+        """Domain field -> sweep input, per sweep."""
+        if affine:
+            return v - jnp.asarray(shift, cdtype)
+        return v
+
+    def post(v, d):
+        """Sweep output -> domain field, per sweep."""
+        if affine:
+            return v + jnp.asarray(shift * s ** d, cdtype)
+        return v
 
     if spec.ndim == 2:
         height, width = shape
@@ -360,17 +398,20 @@ def _build_chain(spec: StencilSpec, shape: tuple[int, ...], dtype,
                                           num_buffers=nbuf,
                                           interpret=interpret)
 
-                if repin:
+                if repin or affine:
                     # layout not closed under the boundary: re-pin the
-                    # ghost halo from the evolved field every sweep
+                    # ghost halo (periodic/reflect) or re-apply the
+                    # affine shift (unnormalized Dirichlet) every sweep
                     for _ in range(count):
-                        xp = jnp.zeros((hp, wp), jnp.float32).at[
-                            :he, :we].set(ghost_extend(v, 2, halo, boundary))
+                        xp = jnp.zeros((hp, wp), cdtype).at[:he, :we].set(
+                            ghost_extend(pre(v, d), 2, halo, boundary)
+                            if repin else pre(v, d))
                         xp = sweep(xp)
-                        v = xp[halo:halo + height, halo:halo + width]
+                        v = post(xp[halo:halo + height,
+                                    halo:halo + width], d)
                 else:
                     # zero-copy: pad once, chain, crop once (§9.3)
-                    xp = jnp.zeros((hp, wp), jnp.float32).at[
+                    xp = jnp.zeros((hp, wp), cdtype).at[
                         :height, :width].set(v)
                     for _ in range(count):
                         xp = sweep(xp)
@@ -402,31 +443,30 @@ def _build_chain(spec: StencilSpec, shape: tuple[int, ...], dtype,
                                           num_buffers=nbuf,
                                           interpret=interpret)
 
-                if repin:
+                if repin or affine:
                     for _ in range(count):
-                        xp = jnp.zeros((zp, yp, xp_), jnp.float32).at[
+                        xp = jnp.zeros((zp, yp, xp_), cdtype).at[
                             :ze, :ye, :xe].set(
-                                ghost_extend(v, 3, halo, boundary))
+                                ghost_extend(pre(v, d), 3, halo, boundary)
+                                if repin else pre(v, d))
                         xp = sweep(xp)
-                        v = xp[halo:halo + zdim, halo:halo + ydim,
-                               halo:halo + xdim]
+                        v = post(xp[halo:halo + zdim, halo:halo + ydim,
+                                    halo:halo + xdim], d)
                 else:
-                    xp = jnp.zeros((zp, yp, xp_), jnp.float32).at[
+                    xp = jnp.zeros((zp, yp, xp_), cdtype).at[
                         :zdim, :ydim, :xdim].set(v)
                     for _ in range(count):
                         xp = sweep(xp)
                     v = xp[:zdim, :ydim, :xdim]
             return v
 
-    if boundary.kind == "dirichlet" and boundary.value != 0.0:
-        shift = boundary.value
-
+    if boundary.kind == "dirichlet" and boundary.value != 0.0 and not affine:
         def run(x):
-            w = x.astype(jnp.float32) - shift
+            w = x.astype(cdtype) - shift
             return (chain(w) + shift).astype(dtype)
     else:
         def run(x):
-            return chain(x.astype(jnp.float32)).astype(dtype)
+            return chain(x.astype(cdtype)).astype(dtype)
 
     return run
 
@@ -483,7 +523,7 @@ class StencilProgram:
     def __init__(self, key, spec: StencilSpec, shape: tuple[int, ...],
                  dtype, t: int, plan: EbisuPlan | None,
                  hw: rl.HardwareModel, boundary: Boundary, mode: str,
-                 interpret: bool):
+                 interpret: bool, compute_dtype=None):
         self._key = key
         self.spec = spec
         self.shape = shape
@@ -494,6 +534,8 @@ class StencilProgram:
         self.boundary = boundary
         self.mode = mode
         self.interpret = interpret
+        self.compute_dtype = (jnp.dtype(compute_dtype) if compute_dtype
+                              else jnp.float32)
 
     # ------------------------------------------------------- execution ----
     def _check(self, x, batched: bool = False):
@@ -518,7 +560,8 @@ class StencilProgram:
             lambda: jax.jit(functools.partial(
                 sweep_once, spec=self.spec, t=depth, plan=self.plan,
                 mode=self.mode, interpret=self.interpret,
-                boundary=self.boundary)))
+                boundary=self.boundary,
+                compute_dtype=self.compute_dtype)))
         return fn(x)
 
     def _run_fn(self, total_t: int):
@@ -530,7 +573,8 @@ class StencilProgram:
                 f"{self.mode!r} (use apply for the lifted 'stream' path)")
         return _build_chain(self.spec, self.shape, self.dtype, total_t,
                             depth, plan, self.hw, self.mode,
-                            self.interpret, self.boundary)
+                            self.interpret, self.boundary,
+                            compute_dtype=self.compute_dtype)
 
     def run(self, x: jnp.ndarray, total_t: int) -> jnp.ndarray:
         """``total_t`` steps as chained temporally-blocked sweeps under a
@@ -566,6 +610,12 @@ class StencilProgram:
                 or self.mode not in ("fused", "scratch")):
             raise ValueError("run_padded is the 2-D zero-Dirichlet "
                              "padded-carry path (fused/scratch); use run()")
+        if xp.dtype != self.compute_dtype:
+            raise ValueError(
+                f"run_padded carry is the compute buffer: expected dtype "
+                f"{self.compute_dtype.name}, got {xp.dtype.name} "
+                "(the caller owns the padded buffer at the program's "
+                "compute_dtype)")
         bh = self.geometry()["block"][0]
         return run_sweeps_padded(
             xp, self.spec, total_t, t=self.t, height=self.shape[0],
@@ -610,7 +660,28 @@ class StencilProgram:
         return (f"StencilProgram({self.spec.name}, shape={self.shape}, "
                 f"t={self.t}, boundary={self.boundary!r}, "
                 f"mode={self.mode!r}, hw={self.hw.name}, "
+                f"dtype={self.dtype.name}/{self.compute_dtype.name}, "
                 f"interpret={self.interpret})")
+
+
+def resolve_compute_dtype(dtype, compute_dtype=None):
+    """The program dtype policy: compute in ``compute_dtype`` when given,
+    else in the storage dtype promoted to at least float32 (bf16/f16
+    fields are stored narrow but stepped in f32 — one rounding at the
+    end instead of one per sweep; f64 storage computes in f64).
+    """
+    if compute_dtype is not None:
+        cd = jnp.dtype(compute_dtype)
+        if not jnp.issubdtype(cd, jnp.floating):
+            raise ValueError(
+                f"compute_dtype must be a floating dtype, got {cd.name}")
+        return cd
+    d = jnp.dtype(dtype)
+    if not jnp.issubdtype(d, jnp.floating):
+        raise ValueError(
+            f"stencil cell dtype must be floating, got {d.name} "
+            "(pass dtype=jnp.float32/bfloat16/... to compile_stencil)")
+    return jnp.promote_types(d, jnp.float32)
 
 
 def compile_stencil(spec: StencilSpec, shape: tuple[int, ...], *,
@@ -618,21 +689,31 @@ def compile_stencil(spec: StencilSpec, shape: tuple[int, ...], *,
                     hw: rl.HardwareModel = rl.TPU_V5E,
                     boundary: Boundary | None = None, mode: str = "fused",
                     interpret: bool | None = None,
-                    plan: EbisuPlan | None | str = "auto") -> StencilProgram:
+                    plan: EbisuPlan | None | str = "auto",
+                    compute_dtype=None) -> StencilProgram:
     """Compile a stencil to an immutable :class:`StencilProgram`.
 
+    Accepts ANY validated :class:`StencilSpec` — the Table-2 registry and
+    ``repro.api.define_stencil`` products are equals here: the plan is
+    derived from the tap structure (``plan_bucketed`` keys on
+    ``spec.signature``), never from a registry lookup.
+
     Resolves — exactly once — the §6 plan (shape-bucketed, memoized),
-    the boundary execution strategy (validated against the tap set), and
-    the interpret/lowering choice (Pallas-TPU on TPU backends,
-    interpreter elsewhere).  Programs are memoized in the bounded
-    ``PROGRAM_CACHE``; recompiling with identical arguments returns the
-    same handle.
+    the boundary execution strategy (validated against the tap set *and*
+    the chain depth: the affine Dirichlet closure, DESIGN.md §11.3), the
+    dtype policy (``dtype`` is cell storage; ``compute_dtype`` — default
+    storage promoted to ≥ f32 — is what the kernels and the multi-sweep
+    chain run in), and the interpret/lowering choice (Pallas-TPU on TPU
+    backends, interpreter elsewhere).  Programs are memoized in the
+    bounded ``PROGRAM_CACHE``; recompiling with identical arguments
+    returns the same handle.
 
     ``t`` is the per-sweep temporal depth (default: the plan's §6.2
     choice).  ``plan`` is normally derived ("auto"); pass an explicit
     ``EbisuPlan`` to pin tiles (autotuning), or ``None`` for the legacy
     request-default tiles the deprecated entry points used.
     """
+    validate_spec(spec)
     shape = tuple(int(n) for n in shape)
     if len(shape) != spec.ndim:
         raise ValueError(f"{spec.name} is {spec.ndim}-D; got shape {shape}")
@@ -642,7 +723,7 @@ def compile_stencil(spec: StencilSpec, shape: tuple[int, ...], *,
         raise ValueError(f"unknown mode {mode!r} for a {spec.ndim}-D spec; "
                          f"expected one of {valid_modes}")
     boundary = ZERO if boundary is None else boundary
-    boundary.validate_for(spec)
+    cdtype = resolve_compute_dtype(dtype, compute_dtype)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if isinstance(plan, str):
@@ -653,13 +734,15 @@ def compile_stencil(spec: StencilSpec, shape: tuple[int, ...], *,
     depth = t if t is not None else (plan.t if plan is not None else 1)
     if depth < 1:
         raise ValueError(f"temporal depth must be >= 1, got {depth}")
+    boundary.validate_for(spec, t=depth)
     key = (spec, shape, jnp.dtype(dtype).name, depth, hw.name,
-           boundary, mode, bool(interpret), _plan_key(plan))
+           boundary, mode, bool(interpret), _plan_key(plan), cdtype.name)
     cached = PROGRAM_CACHE.get(key)
     if cached is not None:
         return cached
     prog = StencilProgram(key, spec, shape, jnp.dtype(dtype), depth, plan,
-                          hw, boundary, mode, bool(interpret))
+                          hw, boundary, mode, bool(interpret),
+                          compute_dtype=cdtype)
     PROGRAM_CACHE.put(key, prog)
     return prog
 

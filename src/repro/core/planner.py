@@ -42,7 +42,8 @@ class Parallelism:
 
 @dataclasses.dataclass(frozen=True)
 class EbisuPlan:
-    spec_name: str
+    spec_name: str             # display/debug only — plan caching keys on
+    # the tap-structure signature (repro.api.plan_bucketed), never the name
     hw_name: str
     tiling: str                # 'device' | 'sm'
     t: int                     # temporal blocking depth

@@ -172,6 +172,35 @@ def min_tile_width(spec: StencilSpec, hw: HardwareModel, *, rst: bool = True) ->
     return 4 * spec.a_gm * hw.b_sm / (a_sm * hw.b_gm) * spec.radius
 
 
+# ------------------------------------------------- derived-spec summary ---
+def spec_cost_summary(spec: StencilSpec, hw: HardwareModel = TPU_V5E) -> dict:
+    """The §5/§6 view of a spec: its cost-model numbers (derived or
+    overridden — see ``stencil_spec.derive_cost_model``), whether each one
+    matches the pure derivation, and the model's headline decisions
+    (Eq 17 desired depth, Eq 23 minimum tile width, arithmetic intensity).
+    The CLI prints this for user-defined stencils so the derived cost
+    model is inspectable, not implicit."""
+    from repro.core.stencil_spec import derive_cost_model
+    derived = derive_cost_model(spec.taps, spec.ndim)
+    return {
+        "name": spec.name,
+        "ndim": spec.ndim,
+        "radius": spec.radius,
+        "npoints": spec.npoints,
+        "shape_kind": spec.shape_kind,
+        "tap_sum": spec.tap_sum,
+        "flops_per_cell": spec.flops_per_cell,
+        "a_sm": spec.a_sm,
+        "a_sm_rst": spec.a_sm_rst,
+        "a_gm": spec.a_gm,
+        "overridden": sorted(k for k, v in derived.items()
+                             if getattr(spec, k) != v),
+        "arith_intensity": spec.flops_per_cell / (spec.a_gm * hw.s_cell),
+        "desired_depth_eq17": desired_depth(spec, hw, rst=True),
+        "min_tile_width_eq23": min_tile_width(spec, hw, rst=True),
+    }
+
+
 # --------------------------------------------------- distributed extension ---
 def halo_exchange_time(spec: StencilSpec, t: int, hw: HardwareModel,
                        shard_shape: tuple[int, ...], n_neighbors: int = 2) -> float:

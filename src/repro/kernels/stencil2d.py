@@ -59,6 +59,9 @@ def _strip_kernel(top_ref, mid_ref, bot_ref, out_ref, *scratch,
     wp = mid_ref.shape[1]
     engine = engine_for(taps, 2)
     rad = engine.radius
+    # compute dtype policy: the kernel computes in the dtype of the padded
+    # buffer it was handed — the program layer decides that dtype
+    cdtype = mid_ref.dtype
 
     # --- one-time Dirichlet boundary mask (DESIGN.md §8.2).  Columns need no
     # mask: the strip is cropped to the true domain width, so the zero-fill
@@ -66,12 +69,12 @@ def _strip_kernel(top_ref, mid_ref, bot_ref, out_ref, *scratch,
     # (sh, 1) mask — the top/bottom domain boundary moves with the strip.
     row0 = i * bh - halo
     rows = jax.lax.broadcasted_iota(jnp.int32, (sh, 1), 0) + row0
-    mask = ((rows >= 0) & (rows < height)).astype(jnp.float32)
+    mask = ((rows >= 0) & (rows < height)).astype(cdtype)
 
     # --- assemble the haloed strip from the halo-exact views ----------------
     vals = jnp.concatenate(
         [top_ref[...], mid_ref[...], bot_ref[...]], axis=0
-    )[:, :width].astype(jnp.float32) * mask
+    )[:, :width] * mask
 
     def emit(body: jnp.ndarray) -> None:
         out_ref[...] = jnp.pad(body, ((0, 0), (0, wp - width))
@@ -182,8 +185,8 @@ def ebisu2d_padded(xp: jnp.ndarray, spec: StencilSpec, t: int, *,
 
     scratch_shapes = []
     if mode == "scratch":
-        scratch_shapes = [pltpu.VMEM((sh, width), jnp.float32),
-                          pltpu.VMEM((sh, width), jnp.float32)]
+        scratch_shapes = [pltpu.VMEM((sh, width), xp.dtype),
+                          pltpu.VMEM((sh, width), xp.dtype)]
 
     # §6.1 wiring: grid steps are independent ⇒ 'parallel' semantics; the
     # planner's num_buffers (DMA pipeline depth) sizes the VMEM budget hint.
@@ -214,28 +217,34 @@ def ebisu2d_padded(xp: jnp.ndarray, spec: StencilSpec, t: int, *,
 
 @functools.partial(jax.jit, static_argnames=("spec", "t", "bh", "mode",
                                              "num_buffers", "interpret",
-                                             "boundary"))
+                                             "boundary", "compute_dtype"))
 def ebisu2d(x: jnp.ndarray, spec: StencilSpec, t: int, *, bh: int = 128,
             mode: str = "fused", num_buffers: int | None = None,
-            interpret: bool = True, boundary=None) -> jnp.ndarray:
+            interpret: bool = True, boundary=None,
+            compute_dtype=None) -> jnp.ndarray:
     """Apply ``t`` temporally-blocked steps of ``spec`` to a 2-D field.
 
     ``boundary`` (default: zero Dirichlet) is resolved by reduction to
-    the zero-Dirichlet core: constant shift for dirichlet(v), deep-halo
-    ghost pinning (extend by ``t·rad`` boundary-true cells, sweep, crop)
-    for periodic/reflect — see ``taps.with_boundary``.
+    the zero-Dirichlet core: the affine closure for dirichlet(v),
+    deep-halo ghost pinning (extend by ``t·rad`` boundary-true cells,
+    sweep, crop) for periodic/reflect — see ``taps.with_boundary``.
+    ``compute_dtype`` (default float32) is the dtype of the padded
+    compute buffer — the result is cast back to ``x.dtype``.
     """
     assert spec.ndim == 2
     if not is_zero_dirichlet(boundary):
-        check_boundary(spec.taps, boundary)
+        check_boundary(spec.taps, boundary, t)
         return with_boundary(
             x, 2, spec.halo(t), boundary,
             lambda v: ebisu2d(v, spec, t, bh=bh, mode=mode,
-                              num_buffers=num_buffers, interpret=interpret))
+                              num_buffers=num_buffers, interpret=interpret,
+                              compute_dtype=compute_dtype),
+            taps=spec.taps, t=t)
+    cdtype = jnp.dtype(compute_dtype) if compute_dtype else jnp.float32
     height, width = x.shape
     hp, wp = padded_shape_2d(spec, t, bh, height, width)
-    xp = jnp.zeros((hp, wp), jnp.float32).at[:height, :width].set(
-        x.astype(jnp.float32))
+    xp = jnp.zeros((hp, wp), cdtype).at[:height, :width].set(
+        x.astype(cdtype))
     out = ebisu2d_padded(xp, spec, t, height=height, width=width, bh=bh,
                          mode=mode, num_buffers=num_buffers,
                          interpret=interpret)

@@ -137,6 +137,9 @@ def _stream_kernel(*args, taps, t: int, rad: int, zc: int, halo: int,
     refs, out_ref, buf = args[:-2], args[-2], args[-1]
     iz, iy, ix = pl.program_id(0), pl.program_id(1), pl.program_id(2)
     engine = engine_for(taps, 3)
+    # compute dtype policy: the kernel computes in the dtype of the padded
+    # buffer it was handed (the scratch windows are allocated to match)
+    cdtype = buf.dtype
     tiled_y, tiled_x = nyk == 3, nxk == 3
     kz = zc // halo
     sz = zc + 2 * halo
@@ -166,15 +169,15 @@ def _stream_kernel(*args, taps, t: int, rad: int, zc: int, halo: int,
         edge is the boundary)."""
         n = planes.shape[0]
         zg = z_base + p0 + jax.lax.broadcasted_iota(jnp.int32, (n, 1, 1), 0)
-        planes = planes * ((zg >= 0) & (zg < zdim)).astype(jnp.float32)
+        planes = planes * ((zg >= 0) & (zg < zdim)).astype(cdtype)
         if tiled_y:
             yg = (y_base + s * rad
                   + jax.lax.broadcasted_iota(jnp.int32, (1, ey(s), 1), 1))
-            planes = planes * ((yg >= 0) & (yg < ydim)).astype(jnp.float32)
+            planes = planes * ((yg >= 0) & (yg < ydim)).astype(cdtype)
         if tiled_x:
             xg = (x_base + s * rad
                   + jax.lax.broadcasted_iota(jnp.int32, (1, 1, ex(s)), 2))
-            planes = planes * ((xg >= 0) & (xg < xdim)).astype(jnp.float32)
+            planes = planes * ((xg >= 0) & (xg < xdim)).astype(cdtype)
         return planes
 
     def slab(j_sub: int) -> jnp.ndarray:
@@ -200,7 +203,7 @@ def _stream_kernel(*args, taps, t: int, rad: int, zc: int, halo: int,
     # the window head, where it stands in for the planes below the strip —
     # the zero-fill edge (DESIGN.md §8.3); the rest is overwritten before
     # it is ever read.
-    buf[:, batch:w] = jnp.zeros((t, w - batch) + buf.shape[2:], jnp.float32)
+    buf[:, batch:w] = jnp.zeros((t, w - batch) + buf.shape[2:], cdtype)
 
     def advance(queue: int, planes: jnp.ndarray) -> None:
         """Shift queue's window by one batch (paper's 'shifting' mode).
@@ -218,7 +221,7 @@ def _stream_kernel(*args, taps, t: int, rad: int, zc: int, halo: int,
         # z-view; in-plane each sub-block is one rim/body/rim concat.
         chunks = [slab(j) for j in range(z0 // halo, (z0 + batch) // halo)]
         newp = (chunks[0] if len(chunks) == 1
-                else jnp.concatenate(chunks, axis=0)).astype(jnp.float32)
+                else jnp.concatenate(chunks, axis=0)).astype(cdtype)
         advance(0, apply_masks(newp, z0, 0))
 
         # ---- cascade: one batched tap application per temporal step -----
@@ -331,7 +334,7 @@ def ebisu3d_padded(xpad: jnp.ndarray, spec: StencilSpec, t: int, *,
     sx = tx_r + 2 * halo if tiled_x else xdim
     scr_y, scr_x = (sy, sx) if interpret else (_pad_to(sy, 8),
                                                _pad_to(sx, 128))
-    scratch = pltpu.VMEM((t, w, scr_y, scr_x), jnp.float32)
+    scratch = pltpu.VMEM((t, w, scr_y, scr_x), xpad.dtype)
 
     params = {}
     if not interpret:
@@ -359,29 +362,36 @@ def ebisu3d_padded(xpad: jnp.ndarray, spec: StencilSpec, t: int, *,
 
 @functools.partial(jax.jit, static_argnames=("spec", "t", "zc", "ty", "tx",
                                              "lazy_batch", "num_buffers",
-                                             "interpret", "boundary"))
+                                             "interpret", "boundary",
+                                             "compute_dtype"))
 def ebisu3d(x: jnp.ndarray, spec: StencilSpec, t: int, *, zc: int = 16,
             ty: int | None = None, tx: int | None = None,
             lazy_batch: int | None = None, num_buffers: int | None = None,
-            interpret: bool = True, boundary=None) -> jnp.ndarray:
+            interpret: bool = True, boundary=None,
+            compute_dtype=None) -> jnp.ndarray:
     """Apply ``t`` temporally-blocked steps of a 3-D ``spec`` via z-streaming.
 
     ``boundary`` (default: zero Dirichlet) is resolved by reduction to
-    the zero-Dirichlet core — constant shift for dirichlet(v), per-sweep
-    deep-halo ghost pinning for periodic/reflect (``taps.with_boundary``).
+    the zero-Dirichlet core — the affine closure for dirichlet(v),
+    per-sweep deep-halo ghost pinning for periodic/reflect
+    (``taps.with_boundary``).  ``compute_dtype`` (default float32) is the
+    dtype of the padded compute buffer and the VMEM streaming windows.
     """
     assert spec.ndim == 3
     if not is_zero_dirichlet(boundary):
-        check_boundary(spec.taps, boundary)
+        check_boundary(spec.taps, boundary, t)
         return with_boundary(
             x, 3, spec.halo(t), boundary,
             lambda v: ebisu3d(v, spec, t, zc=zc, ty=ty, tx=tx,
                               lazy_batch=lazy_batch, num_buffers=num_buffers,
-                              interpret=interpret))
+                              interpret=interpret,
+                              compute_dtype=compute_dtype),
+            taps=spec.taps, t=t)
+    cdtype = jnp.dtype(compute_dtype) if compute_dtype else jnp.float32
     zdim, ydim, xdim = x.shape
     zp, yp, xp = padded_shape_3d(spec, t, x.shape, zc=zc, ty=ty, tx=tx)
-    xpad = jnp.zeros((zp, yp, xp), jnp.float32).at[
-        :zdim, :ydim, :xdim].set(x.astype(jnp.float32))
+    xpad = jnp.zeros((zp, yp, xp), cdtype).at[
+        :zdim, :ydim, :xdim].set(x.astype(cdtype))
     out = ebisu3d_padded(xpad, spec, t, zdim=zdim, ydim=ydim, xdim=xdim,
                          zc=zc, ty=ty, tx=tx, lazy_batch=lazy_batch,
                          num_buffers=num_buffers, interpret=interpret)

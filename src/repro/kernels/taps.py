@@ -274,13 +274,27 @@ def is_zero_dirichlet(boundary) -> bool:
             or (boundary.kind == "dirichlet" and boundary.value == 0.0))
 
 
-def check_boundary(taps: Taps, boundary) -> None:
-    """Raise ``ValueError`` when ``taps`` cannot run under ``boundary``
-    through the zero-Dirichlet reductions below.
+def tap_sum(taps: Taps) -> float:
+    """Sum of tap coefficients ``s`` — the contraction factor of the affine
+    closure: one true Dirichlet(v) step satisfies ``u_1 = Z(u_0 − v) + v·s``
+    exactly for ANY ``s`` (DESIGN.md §11.3)."""
+    return sum(c for _, c in taps)
 
-    * dirichlet(v≠0) needs ``sum(coeffs) == 1``: the shift identity
-      ``u_t = Z_t(u_0 − v) + v`` holds iff a constant field is a fixed
-      point of one step.
+
+def check_boundary(taps: Taps, boundary, t: int | None = None) -> None:
+    """Raise ``ValueError`` when a ``t``-step fused chain of ``taps``
+    cannot run under ``boundary`` through the zero-Dirichlet reductions
+    below (``t=None``: depth unknown — require the depth-independent
+    closure).
+
+    * dirichlet(v≠0) runs through the affine closure
+      ``u_t = Z_t(u_0 − v) + v·s^t`` (``s`` = tap sum), which is exact
+      iff ``s == 1`` (the classic constant shift, any depth) or ``t == 1``
+      (a single step — chains of depth-1 sweeps re-apply the shift every
+      sweep).  For ``s ≠ 1`` at ``t ≥ 2`` the correction term
+      ``v·Σ_k s^{t-1-k}(s·Z^k(1) − Z^{k+1}(1))`` is a *field* supported on
+      the ``t·rad`` boundary band, not a constant — no pre/post shift of a
+      fused chain can absorb it, so we refuse with the fixes spelled out.
     * reflect needs per-axis mirror symmetry of the tap set: only then is
       the mirror extension preserved by evolution, making the one-time
       deep-halo ghost fill equivalent to re-mirroring every step.
@@ -288,12 +302,17 @@ def check_boundary(taps: Taps, boundary) -> None:
     if is_zero_dirichlet(boundary) or boundary.kind == "periodic":
         return
     if boundary.kind == "dirichlet":
-        s = sum(c for _, c in taps)
-        if abs(s - 1.0) > 1e-6:
+        s = tap_sum(taps)
+        if abs(s - 1.0) > 1e-6 and t != 1:
             raise ValueError(
-                f"non-zero Dirichlet needs taps summing to 1 (got {s:.6g}): "
-                "the constant-shift reduction to the zero-Dirichlet kernels "
-                "is exact only for normalized (Jacobi) tap sets")
+                f"dirichlet({boundary.value:g}) with taps summing to "
+                f"s={s:.6g}: the affine closure u_t = Z_t(u - v) + v*s^t "
+                f"is exact only for s == 1 or single-step sweeps, and this "
+                f"chain is t={'unknown' if t is None else t} steps deep. "
+                "Fix: compile with t=1 (exact, chained per sweep), "
+                "normalize the taps to sum 1 "
+                "(define_stencil(..., normalize=True)), or use "
+                "dirichlet(0)/periodic, which are exact for any tap sum")
         return
     if boundary.kind == "reflect":
         coeff = dict(taps)
@@ -320,12 +339,17 @@ def ghost_extend(x: jnp.ndarray, ndim: int, halo: int,
     return jnp.pad(x, pad, mode=mode)
 
 
-def with_boundary(x: jnp.ndarray, ndim: int, halo: int, boundary, core):
+def with_boundary(x: jnp.ndarray, ndim: int, halo: int, boundary, core,
+                  *, taps: Taps | None = None, t: int = 1):
     """Run ``core`` — a zero-Dirichlet ``t``-step map over the last
     ``ndim`` axes — under ``boundary``, where ``halo`` is the ``t·rad``
     reach of the chain ``core`` applies.
 
-    dirichlet(v): the exact constant shift (no extra traffic at all).
+    dirichlet(v): the affine closure ``core(x − v) + v·s^t`` (``s`` = tap
+    sum; no extra traffic at all) — the constant shift when ``s = 1``,
+    exact for any ``s`` when ``t = 1`` (``check_boundary`` enforces one of
+    the two; pass ``taps`` so ``s`` is known — omitting them assumes a
+    normalized set).
     periodic/reflect: deep-halo ghost pinning — extend by ``halo``
     boundary-true cells, run ``core`` on the extended domain (its
     zero-fill corruption stays inside the ghost ring for ``t`` steps),
@@ -336,7 +360,8 @@ def with_boundary(x: jnp.ndarray, ndim: int, halo: int, boundary, core):
         return core(x)
     if boundary.kind == "dirichlet":
         v = jnp.asarray(boundary.value, x.dtype)
-        return core(x - v) + v
+        scale = tap_sum(taps) ** t if taps is not None else 1.0
+        return core(x - v) + v * jnp.asarray(scale, x.dtype)
     xe = ghost_extend(x, ndim, halo, boundary)
     ye = core(xe)
     crop = (Ellipsis,) + tuple(slice(halo, halo + n)

@@ -1,10 +1,18 @@
-"""Stencil driver: run the paper's suite end-to-end (single- or multi-device).
+"""Stencil driver: the paper's suite AND user-defined stencils, end-to-end.
 
 Quick start (the three-line compile→run flow):
 
-    from repro.api import Boundary, compile_stencil
+    from repro.api import Boundary, compile_stencil, define_stencil
+    spec = define_stencil([((0, 0), 0.6), ((0, 1), 0.1), ...])  # any taps
     prog = compile_stencil(spec, x.shape, t=4, boundary=Boundary.periodic())
     y = prog.run(x, T=64)         # 64 steps as chained zero-copy sweeps
+
+Custom stencils are drivable straight from the CLI — the derived §5 cost
+model is printed so the analytic machinery is inspectable:
+
+    python -m repro.launch.stencil_run \
+        --taps '[[[0,0],0.6],[[0,1],0.1],[[0,-1],0.1],[[1,0],0.1],[[-1,0],0.1]]' --t 2
+    python -m repro.launch.stencil_run --spec-json my_stencil.json
 
 ``--distributed`` shards the domain over the host mesh and uses the deep-halo
 communication-avoiding schedule; otherwise the compiled program drives the
@@ -17,8 +25,10 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.api import Boundary, compile_stencil
-from repro.core.stencil_spec import TABLE2, get
+from repro.api import (Boundary, compile_stencil, define_stencil,
+                       parse_taps, spec_from_json)
+from repro.core import roofline as rl
+from repro.core.stencil_spec import StencilSpec, TABLE2, get
 from repro.kernels import ref
 from repro.stencils.data import init_domain, reduced_domain
 
@@ -36,12 +46,30 @@ def parse_boundary(text: str) -> Boundary:
         f"unknown boundary {text!r}; use dirichlet[:v] | periodic | reflect")
 
 
-def run_single(name: str, *, t: int | None = None, scale: int = 64,
-               boundary: Boundary | None = None, check: bool = True):
-    spec = get(name)
+def cost_summary_line(spec: StencilSpec,
+                      hw: rl.HardwareModel = rl.TPU_V5E) -> str:
+    """One line of the derived §5 cost model (flagging any overrides)."""
+    c = rl.spec_cost_summary(spec, hw)
+    over = f" overrides={','.join(c['overridden'])}" if c["overridden"] else ""
+    return (f"[spec]    {spec.name:11s} {c['ndim']}D r={c['radius']} "
+            f"{c['npoints']}pt {c['shape_kind']} tap_sum={c['tap_sum']:.4g} | "
+            f"flops/cell={c['flops_per_cell']:g} "
+            f"a_sm={c['a_sm']:g} a_sm_rst={c['a_sm_rst']:g}{over} | "
+            f"eq17 t*={c['desired_depth_eq17']:.1f} "
+            f"eq23 w_min={c['min_tile_width_eq23']:.0f}")
+
+
+def run_single(spec: StencilSpec | str, *, t: int | None = None,
+               scale: int = 64, boundary: Boundary | None = None,
+               check: bool = True, summary: bool = False):
+    spec = get(spec) if isinstance(spec, str) else spec
     shape = reduced_domain(spec, scale)
     boundary = boundary or Boundary.dirichlet(0.0)
-    prog = compile_stencil(spec, shape, boundary=boundary, interpret=True)
+    # unnormalized Dirichlet admits only depth-1 sweeps (affine closure)
+    depth_cap = 1 if (boundary.kind == "dirichlet" and boundary.value != 0.0
+                      and abs(spec.tap_sum - 1.0) > 1e-6) else None
+    prog = compile_stencil(spec, shape, boundary=boundary, interpret=True,
+                           t=depth_cap)
     depth = t or min(prog.t, 6)
     x = init_domain(spec, shape)
     t0 = time.time()
@@ -57,7 +85,9 @@ def run_single(name: str, *, t: int | None = None, scale: int = 64,
     y.block_until_ready()
     dt = time.time() - t0
     plan = prog.plan
-    line = (f"[stencil] {name:11s} domain={shape} t={depth} {how} "
+    if summary:
+        print(cost_summary_line(spec, prog.hw), flush=True)
+    line = (f"[stencil] {spec.name:11s} domain={shape} t={depth} {how} "
             f"boundary={boundary!r} "
             f"plan(t={plan.t}, tile={plan.block}, "
             f"lazy_batch={plan.lazy_batch}, "
@@ -103,11 +133,16 @@ def run_distributed(name: str, *, t_total: int = 4, t_block: int = 2,
 
 
 QUICKSTART = """\
-quick start (compile once, run many):
-  from repro.api import Boundary, compile_stencil
-  prog = compile_stencil(get("j2d5pt"), x.shape, t=6,
+quick start (compile once, run many — any tap set):
+  from repro.api import Boundary, compile_stencil, define_stencil
+  spec = define_stencil([((0,0),0.6), ((0,1),0.1), ...])  # or get("j2d5pt")
+  prog = compile_stencil(spec, x.shape, t=6,
                          boundary=Boundary.periodic())
   y = prog.run(x, T=64)     # or prog.apply(x) / prog.run_batched(xs, T)
+
+custom stencils from the CLI (derived cost model printed):
+  --taps '[[[0,0],0.6],[[0,1],0.1],[[0,-1],0.1],[[1,0],0.1],[[-1,0],0.1]]'
+  --spec-json my_stencil.json   # {"taps": [...], "name": ..., ...}
 
 legacy ops.ebisu_stencil / sweep.run_sweeps are deprecated shims over
 compiled programs (policy in README.md)."""
@@ -117,7 +152,17 @@ def main():
     ap = argparse.ArgumentParser(
         epilog=QUICKSTART,
         formatter_class=argparse.RawDescriptionHelpFormatter)
-    ap.add_argument("--stencil", default="all")
+    ap.add_argument("--stencil", default="all",
+                    help="Table-2 names (comma-separated) or 'all'")
+    ap.add_argument("--taps", default=None,
+                    metavar="'[[[0,0],0.6],...]'",
+                    help="define a custom stencil from a JSON tap list")
+    ap.add_argument("--spec-json", default=None, metavar="FILE",
+                    help="define a custom stencil from a JSON spec file")
+    ap.add_argument("--normalize", action="store_true",
+                    help="rescale --taps coefficients to sum to 1")
+    ap.add_argument("--name", default=None,
+                    help="name for the --taps stencil")
     ap.add_argument("--t", type=int, default=None)
     ap.add_argument("--scale", type=int, default=64)
     ap.add_argument("--boundary", type=parse_boundary, default=None,
@@ -125,6 +170,18 @@ def main():
                     help="boundary condition (default zero Dirichlet)")
     ap.add_argument("--distributed", action="store_true")
     args = ap.parse_args()
+    if args.taps and args.spec_json:
+        ap.error("--taps and --spec-json are mutually exclusive")
+    if args.taps or args.spec_json:
+        if args.distributed:
+            ap.error("--distributed drives the Table-2 suite; custom specs "
+                     "run single-device (for now)")
+        spec = (define_stencil(parse_taps(args.taps),
+                               normalize=args.normalize, name=args.name)
+                if args.taps else spec_from_json(args.spec_json))
+        run_single(spec, t=args.t, scale=args.scale,
+                   boundary=args.boundary, summary=True)
+        return
     names = list(TABLE2) if args.stencil == "all" else args.stencil.split(",")
     for n in names:
         if args.distributed:

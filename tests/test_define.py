@@ -1,0 +1,393 @@
+"""The open stencil definition layer: derived cost models vs Table 2
+(paper fidelity as a test), ``define_stencil`` validation, randomized
+user specs vs an independent pad/roll oracle, registry-free planning,
+the affine Dirichlet closure, and the compute-dtype policy."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (Boundary, compile_stencil, define_stencil,
+                       from_operator, parse_taps, plan_bucketed,
+                       resolve_compute_dtype, spec_from_json)
+from repro.api.define import OPERATORS
+from repro.core import roofline as rl
+from repro.core.stencil_spec import (DEFAULT_DOMAINS, MAX_RADIUS, TABLE2,
+                                     derive_a_sm, derive_a_sm_rst,
+                                     derive_cost_model,
+                                     derive_flops_per_cell, get,
+                                     validate_spec)
+from repro.kernels import ref
+from repro.stencils.data import init_domain
+
+ALL_SPECS = list(TABLE2.values())
+
+
+# ------------------------------------------------- independent oracle ------
+# Deliberately NOT the tap engine: numpy zero-pad ghost ring + hand-written
+# slices (zero Dirichlet), jnp.roll (periodic).
+
+def pad_oracle(x, taps, t):
+    x = np.asarray(x, np.float64)
+    rad = max(max(abs(o) for o in off) for off, _ in taps)
+    for _ in range(t):
+        xe = np.pad(x, rad)
+        acc = np.zeros_like(x)
+        for off, c in taps:
+            sl = tuple(slice(rad + o, rad + o + n)
+                       for o, n in zip(off, x.shape))
+            acc = acc + c * xe[sl]
+        x = acc
+    return x
+
+
+def roll_oracle(x, taps, t):
+    acc = x
+    for _ in range(t):
+        nxt = jnp.zeros_like(acc)
+        for off, c in taps:
+            nxt = nxt + c * jnp.roll(acc, tuple(-o for o in off),
+                                     axis=tuple(range(acc.ndim)))
+        acc = nxt
+    return acc
+
+
+# ====================================================== paper fidelity ====
+@pytest.mark.parametrize("spec", ALL_SPECS, ids=lambda s: s.name)
+def test_derivation_reproduces_table2(spec):
+    """The analytic cost model reproduces the paper's published numbers:
+    ``a_sm`` and ``a_sm (RST)`` exactly for all nine benchmarks, and
+    flops/cell for eight — j2d25pt is the paper's lone 1-FLOP-per-FMA
+    count, pinned below as the single registered divergence."""
+    assert derive_a_sm(spec.taps) == spec.a_sm, spec.name
+    assert derive_a_sm_rst(spec.taps, spec.ndim) == spec.a_sm_rst, spec.name
+    if spec.name == "j2d25pt":
+        assert spec.flops_per_cell == 25          # Table-2 verbatim override
+        assert derive_flops_per_cell(spec.taps) == 50   # our 2/tap convention
+    else:
+        assert derive_flops_per_cell(spec.taps) == spec.flops_per_cell
+
+
+def test_derived_geometry_matches_registry():
+    """ndim / radius / shape_kind are derived from the tap set — the
+    registry entries went through the same builder, so they agree."""
+    for spec in ALL_SPECS:
+        rebuilt = define_stencil(spec.taps, name=spec.name,
+                                 domain=spec.domain)
+        assert rebuilt.ndim == spec.ndim
+        assert rebuilt.radius == spec.radius
+        assert rebuilt.shape_kind == spec.shape_kind
+        # same taps, derived (non-overridden) cost numbers → the derived
+        # model is what define_stencil users get by default
+        assert rebuilt.a_sm == derive_a_sm(spec.taps)
+
+
+# ========================================================== validation ====
+def test_validation_errors_are_precise():
+    with pytest.raises(ValueError, match="non-empty tap set"):
+        define_stencil([])
+    with pytest.raises(ValueError, match="inconsistent offset arity"):
+        define_stencil([((0, 0), 1.0), ((0, 0, 1), 0.5)])
+    with pytest.raises(ValueError, match="non-integer"):
+        define_stencil([((0.5, 0), 1.0), ((1, 0), 1.0)])
+    with pytest.raises(ValueError, match="duplicate tap offset"):
+        define_stencil([((0, 0), 0.5), ((0, 0), 0.5), ((0, 1), 0.3)])
+    with pytest.raises(ValueError, match="zero coefficient"):
+        define_stencil([((0, 0), 0.5), ((0, 1), 0.0)])
+    with pytest.raises(ValueError, match="non-finite"):
+        define_stencil([((0, 0), float("nan")), ((0, 1), 1.0)])
+    with pytest.raises(ValueError, match="radius is 0"):
+        define_stencil([((0, 0), 1.0)])
+    with pytest.raises(ValueError, match=f"bound {MAX_RADIUS}"):
+        define_stencil([((0, 0), 1.0), ((0, MAX_RADIUS + 1), 1.0)])
+    with pytest.raises(ValueError, match="2-D or 3-D"):
+        define_stencil([((0,), 1.0), ((1,), 1.0)])
+    with pytest.raises(ValueError, match="cannot normalize"):
+        define_stencil([((0, 0), -1.0), ((0, 1), 1.0)], normalize=True)
+    with pytest.raises(ValueError, match="domain"):
+        define_stencil([((0, 0), 0.5), ((0, 1), 0.5)], domain=(64,))
+
+
+def test_compile_validates_hand_built_specs():
+    """compile_stencil runs the same validation pass, so inconsistent
+    hand-built (dataclasses.replace'd) specs fail with a precise error
+    instead of mislaunching."""
+    good = get("j2d5pt")
+    bad_radius = dataclasses.replace(good, radius=2)
+    with pytest.raises(ValueError, match="radius=2 but the tap set"):
+        compile_stencil(bad_radius, (32, 32), t=1, interpret=True)
+    bad_cost = dataclasses.replace(good, a_sm=-1.0)
+    with pytest.raises(ValueError, match="a_sm"):
+        compile_stencil(bad_cost, (32, 32), t=1, interpret=True)
+    with pytest.raises(KeyError, match="define_stencil"):
+        get("nonexistent")
+
+
+# ============================================= randomized user stencils ====
+def _random_taps(rng, ndim, radius, npoints):
+    box = [off for off in np.ndindex(*(2 * radius + 1,) * ndim)]
+    offs = [tuple(int(o) - radius for o in off) for off in box]
+    rng.shuffle(offs)
+    chosen = offs[:npoints]
+    if all(max(abs(o) for o in off) == 0 for off in chosen):
+        chosen[0] = (radius,) + (0,) * (ndim - 1)   # ensure radius >= 1
+    return tuple((off, float(rng.uniform(0.1, 1.0))) for off in chosen)
+
+
+RANDOM_CASES = [(2, 1, 4), (2, 2, 7), (3, 1, 5), (3, 2, 9)]
+
+
+@pytest.mark.parametrize("ndim,radius,npoints", RANDOM_CASES)
+def test_random_specs_match_pad_oracle(ndim, radius, npoints):
+    """Seeded random tap sets (no registry, no hypothesis) compile and
+    match the independent numpy pad oracle at t ∈ {1, 2, 4}."""
+    rng = np.random.RandomState(ndim * 100 + radius * 10 + npoints)
+    spec = define_stencil(_random_taps(rng, ndim, radius, npoints),
+                          normalize=True)
+    assert spec.name.startswith("user")          # not a registry entry
+    shape = (26, 21) if ndim == 2 else (10, 9, 11)
+    x = init_domain(spec, shape)
+    for t in (1, 2, 4):
+        prog = compile_stencil(spec, shape, t=t, interpret=True)
+        got = np.asarray(prog.apply(x))
+        want = pad_oracle(x, spec.taps, t)
+        assert np.abs(got - want).max() < 1e-4, (spec.taps, t)
+
+
+def test_random_spec_periodic_matches_roll_oracle():
+    rng = np.random.RandomState(7)
+    spec = define_stencil(_random_taps(rng, 2, 1, 5), normalize=True)
+    x = init_domain(spec, (24, 20))
+    for t in (1, 2, 4):
+        prog = compile_stencil(spec, x.shape, t=t,
+                               boundary=Boundary.periodic(), interpret=True)
+        err = float(jnp.abs(prog.apply(x) - roll_oracle(x, spec.taps, t)).max())
+        assert err < 1e-4, t
+
+
+def test_unnormalized_spec_zero_dirichlet_any_depth():
+    """Tap sums != 1 are first-class under zero Dirichlet (the zero-fill
+    reduction is sum-agnostic) — including the executor's chained path."""
+    taps = (((0, 0), 0.55), ((0, 1), 0.2), ((0, -1), 0.1),
+            ((1, 0), 0.08), ((-1, 0), 0.04))               # s = 0.97
+    spec = define_stencil(taps, name="aniso5")
+    x = init_domain(spec, (30, 26))
+    for t in (1, 2, 4):
+        prog = compile_stencil(spec, x.shape, t=t, interpret=True)
+        want = pad_oracle(x, taps, t)
+        assert np.abs(np.asarray(prog.apply(x)) - want).max() < 1e-4
+    assert np.abs(np.asarray(prog.run(x, 6)) - pad_oracle(x, taps, 6)
+                  ).max() < 1e-4
+
+
+# ================================================ registry-free planning ==
+def test_custom_spec_plans_without_registry():
+    """plan_bucketed keys on tap structure: a spec absent from TABLE2
+    plans, and two differently-named specs with identical structure share
+    ONE cached plan."""
+    taps = (((0, 0), 0.5), ((0, 1), 0.2), ((0, -1), 0.1),
+            ((1, 0), 0.1), ((-1, 0), 0.1))
+    a = define_stencil(taps, name="custom-a")
+    b = define_stencil(taps, name="custom-b")
+    assert a.name not in TABLE2 and b.name not in TABLE2
+    pa = plan_bucketed(a, (200, 200))
+    pb = plan_bucketed(b, (220, 240))       # same 64-bucket: (256, 256)
+    assert pa is pb                          # structure-keyed cache hit
+    # an override of the cost model changes planning identity
+    c = define_stencil(taps, name="custom-c", a_sm_rst=40.0)
+    assert c.signature != a.signature
+    pc = plan_bucketed(c, (200, 200))
+    assert pc is not pa
+
+
+def test_operator_cost_summary_flags_overrides():
+    s = rl.spec_cost_summary(get("j2d25pt"))
+    assert s["overridden"] == ["flops_per_cell"]
+    user = define_stencil((((0, 0), 0.6), ((0, 1), 0.2), ((0, -1), 0.2)))
+    assert rl.spec_cost_summary(user)["overridden"] == []
+    assert user.domain == DEFAULT_DOMAINS[2]
+
+
+# =============================================== affine Dirichlet closure ==
+def test_affine_dirichlet_exact_at_depth_one():
+    """dirichlet(v) with tap sum s != 1: u' = Z(u - v) + v*s per sweep is
+    exact — apply and the chained executor match the per-step oracle."""
+    taps = (((0, 0), 0.55), ((0, 1), 0.2), ((0, -1), 0.1),
+            ((1, 0), 0.08), ((-1, 0), 0.04))
+    spec = define_stencil(taps, name="aniso-affine")
+    b = Boundary.dirichlet(0.5)
+    x = init_domain(spec, (28, 24))
+    prog = compile_stencil(spec, x.shape, t=1, boundary=b, interpret=True)
+    for T in (1, 3):
+        got = prog.run(x, T) if T > 1 else prog.apply(x)
+        want = ref.reference(x, spec, T, boundary=b)
+        assert float(jnp.abs(got - want).max()) < 1e-4, T
+
+
+def test_affine_dirichlet_depth_two_raises_actionably():
+    taps = (((0, 0), 0.55), ((0, 1), 0.2), ((0, -1), 0.1),
+            ((1, 0), 0.08), ((-1, 0), 0.04))
+    spec = define_stencil(taps)
+    with pytest.raises(ValueError) as ei:
+        compile_stencil(spec, (28, 24), t=2,
+                        boundary=Boundary.dirichlet(0.5), interpret=True)
+    msg = str(ei.value)
+    assert "affine closure" in msg and "normalize" in msg and "t=1" in msg
+    # the runtime depth override is checked too
+    prog = compile_stencil(spec, (28, 24), t=1,
+                           boundary=Boundary.dirichlet(0.5), interpret=True)
+    x = init_domain(spec, (28, 24))
+    with pytest.raises(ValueError, match="affine closure"):
+        prog.apply(x, t=3)
+
+
+def test_normalized_dirichlet_constant_shift_unchanged():
+    """s == 1 keeps the zero-copy constant-shift path at any depth."""
+    spec = get("j2d9pt")
+    b = Boundary.dirichlet(0.7)
+    x = init_domain(spec, (30, 26))
+    prog = compile_stencil(spec, x.shape, t=4, boundary=b, interpret=True)
+    err = float(jnp.abs(prog.run(x, 9)
+                        - ref.reference(x, spec, 9, boundary=b)).max())
+    assert err < 1e-4
+
+
+# ===================================================== operator builders ==
+@pytest.mark.parametrize("kind", sorted(OPERATORS))
+def test_from_operator_compiles_and_matches_reference(kind):
+    spec = from_operator(kind, ndim=2, radius=1)
+    x = init_domain(spec, (26, 22))
+    prog = compile_stencil(spec, x.shape, t=2, interpret=True)
+    err = float(jnp.abs(prog.apply(x) - ref.reference(x, spec, 2)).max())
+    assert err < 1e-4, kind
+
+
+def test_diffusion_at_stability_limit_drops_zero_center():
+    """alpha = 1/(2·ndim) zeroes the center weight exactly — a valid
+    pure-neighbor smoother, not a 'zero coefficient' error."""
+    spec = from_operator("diffusion", ndim=2, alpha=0.25)
+    assert all(off != (0, 0) for off, _ in spec.taps)
+    assert abs(spec.tap_sum - 1.0) < 1e-12
+
+
+def test_numpy_integer_offsets_accepted():
+    off = np.array([0, 1])
+    spec = define_stencil([((int(off[0]), int(off[0])), 0.5),
+                           ((np.int64(0), np.int64(1)), 0.25),
+                           ((np.int64(0), np.int64(-1)), 0.25)])
+    assert spec.taps[1][0] == (0, 1)
+    assert all(type(o) is int for t, _ in spec.taps for o in t)
+
+
+def test_operator_tap_sums():
+    assert abs(from_operator("laplacian", ndim=3).tap_sum) < 1e-12
+    assert abs(from_operator("diffusion", ndim=3, alpha=0.1).tap_sum
+               - 1.0) < 1e-12
+    assert abs(from_operator("blur", ndim=2, radius=2).tap_sum - 1.0) < 1e-9
+    with pytest.raises(ValueError, match="unknown operator"):
+        from_operator("conv")
+    with pytest.raises(ValueError, match="radius 1 or 2"):
+        from_operator("laplacian", radius=3)
+
+
+# ======================================================== dtype policy ====
+def test_resolve_compute_dtype_policy():
+    assert resolve_compute_dtype(jnp.float32) == jnp.dtype(jnp.float32)
+    assert resolve_compute_dtype(jnp.bfloat16) == jnp.dtype(jnp.float32)
+    assert resolve_compute_dtype(jnp.bfloat16,
+                                 jnp.bfloat16) == jnp.dtype(jnp.bfloat16)
+    with pytest.raises(ValueError, match="floating"):
+        resolve_compute_dtype(jnp.int32)
+    with pytest.raises(ValueError, match="floating"):
+        resolve_compute_dtype(jnp.float32, jnp.int8)
+
+
+def test_bf16_storage_f32_compute_beats_bf16_compute():
+    """The satellite tolerance test: bf16 cells stepped in f32 (the
+    default policy) round once at the end; stepping in bf16 rounds every
+    sweep and visibly drifts from the f32 oracle."""
+    spec = get("j2d5pt")
+    x = init_domain(spec, (48, 40), dtype=jnp.bfloat16)
+    want = ref.reference(x.astype(jnp.float32), spec, 8)
+    prog_f32 = compile_stencil(spec, x.shape, t=4, dtype=jnp.bfloat16,
+                               interpret=True)
+    prog_bf16 = compile_stencil(spec, x.shape, t=4, dtype=jnp.bfloat16,
+                                compute_dtype=jnp.bfloat16, interpret=True)
+    assert prog_f32.compute_dtype == jnp.dtype(jnp.float32)
+    assert prog_bf16.compute_dtype == jnp.dtype(jnp.bfloat16)
+    e_f32 = float(jnp.abs(prog_f32.run(x, 8).astype(jnp.float32)
+                          - want).max())
+    e_bf16 = float(jnp.abs(prog_bf16.run(x, 8).astype(jnp.float32)
+                           - want).max())
+    assert e_f32 < 5e-3                       # one final rounding
+    assert e_bf16 > e_f32                     # per-sweep rounding drifts
+    # distinct programs (dtype policy is part of the cache key)
+    assert prog_f32 is not prog_bf16
+
+
+def test_compute_dtype_threads_through_apply_and_3d():
+    spec = get("j3d7pt")
+    x = init_domain(spec, (12, 9, 11), dtype=jnp.bfloat16)
+    prog = compile_stencil(spec, x.shape, t=2, dtype=jnp.bfloat16,
+                           interpret=True)
+    y = prog.apply(x)
+    assert y.dtype == jnp.bfloat16
+    want = ref.reference(x.astype(jnp.float32), spec, 2)
+    assert float(jnp.abs(y.astype(jnp.float32) - want).max()) < 5e-3
+
+
+# ========================================================== CLI adapters ==
+def test_parse_taps_and_spec_json():
+    taps = parse_taps('[[[0,0],0.6],[[0,1],0.2],[[0,-1],0.2]]')
+    assert taps == (((0, 0), 0.6), ((0, 1), 0.2), ((0, -1), 0.2))
+    with pytest.raises(ValueError, match="JSON"):
+        parse_taps("not json")
+    with pytest.raises(ValueError, match=r"\[offset, coeff\]"):
+        parse_taps('[[0.5, 1]]')
+    with pytest.raises(ValueError, match="non-integer"):
+        parse_taps('[[[0, 1.9], 0.5], [[0, 0], 0.5]]')
+    with pytest.raises(ValueError, match="'kind'"):
+        spec_from_json({"operator": {"ndim": 2}})
+    spec = spec_from_json({"taps": [[[0, 0], 0.5], [[0, 1], 0.5]],
+                           "name": "mine", "domain": [256, 512],
+                           "flops_per_cell": 99})
+    assert spec.name == "mine" and spec.domain == (256, 512)
+    assert spec.flops_per_cell == 99          # explicit override
+    assert spec.a_sm == derive_a_sm(spec.taps)   # rest derived
+    op = spec_from_json({"operator": {"kind": "diffusion", "ndim": 2}})
+    assert abs(op.tap_sum - 1.0) < 1e-12
+    with pytest.raises(ValueError, match="'taps'"):
+        spec_from_json({"name": "no-taps"})
+
+
+def test_acceptance_anisotropic_unnormalized_end_to_end():
+    """The issue's acceptance case in one test: an anisotropic
+    unnormalized 2-D 5-point absent from Table 2 compiles via
+    define_stencil + compile_stencil, plans without registry lookups, and
+    matches the independent oracle at t ∈ {1, 2, 4} under every boundary
+    its tap set admits; the inadmissible combination fails at compile
+    time with an actionable message."""
+    taps = (((0, 0), 0.5), ((0, 1), 0.25), ((0, -1), 0.05),
+            ((1, 0), 0.15), ((-1, 0), 0.03))               # s = 0.98
+    spec = define_stencil(taps, name="accept-aniso")
+    assert spec.name not in TABLE2
+    x = init_domain(spec, (30, 27))
+    derived = derive_cost_model(taps, 2)
+    assert (spec.flops_per_cell, spec.a_sm, spec.a_sm_rst) == \
+        (derived["flops_per_cell"], derived["a_sm"], derived["a_sm_rst"])
+    for t in (1, 2, 4):
+        # admissible: zero Dirichlet (any s) and periodic (any s)
+        p0 = compile_stencil(spec, x.shape, t=t, interpret=True)
+        assert np.abs(np.asarray(p0.apply(x))
+                      - pad_oracle(x, taps, t)).max() < 1e-4
+        pp = compile_stencil(spec, x.shape, t=t,
+                             boundary=Boundary.periodic(), interpret=True)
+        assert float(jnp.abs(pp.apply(x)
+                             - roll_oracle(x, taps, t)).max()) < 1e-4
+    # not mirror-symmetric → reflect refuses, actionably
+    with pytest.raises(ValueError, match="mirror"):
+        compile_stencil(spec, x.shape, t=1, boundary=Boundary.reflect())
+    # unnormalized + non-zero Dirichlet beyond depth 1 → refuses
+    with pytest.raises(ValueError, match="affine closure"):
+        compile_stencil(spec, x.shape, t=4, boundary=Boundary.dirichlet(1.0))

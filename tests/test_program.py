@@ -106,13 +106,21 @@ def test_boundary_validation_errors():
         Boundary("torus")
     with pytest.raises(ValueError, match="no value"):
         Boundary("periodic", 1.0)
-    # non-normalized taps cannot take the Dirichlet constant-shift path
+    # non-normalized taps run non-zero Dirichlet only through the affine
+    # closure: exact for depth-1 sweeps, refused (actionably) for deeper
+    # fused chains (DESIGN.md §11.3)
     import dataclasses
     bad = dataclasses.replace(spec2, name="unnorm",
                               taps=tuple((o, 2 * c) for o, c in spec2.taps))
-    with pytest.raises(ValueError, match="summing to 1"):
-        compile_stencil(bad, (16, 16), t=1,
+    with pytest.raises(ValueError, match="affine closure"):
+        compile_stencil(bad, (16, 16), t=2,
                         boundary=Boundary.dirichlet(0.5))
+    x2 = init_domain(spec2, (16, 16))
+    p1 = compile_stencil(bad, (16, 16), t=1,
+                         boundary=Boundary.dirichlet(0.5), interpret=True)
+    err = float(jnp.abs(p1.apply(x2)
+                        - oracle(x2, bad, 1, Boundary.dirichlet(0.5))).max())
+    assert err < 1e-4          # u_1 = Z(u - v) + v*s, exact for any s
     # mirror-asymmetric taps cannot run reflect exactly
     asym = dataclasses.replace(
         spec2, name="asym",
