@@ -4,28 +4,32 @@ derived: modeled HBM-traffic ratio naive/EBISU on v5e — the quantity the
 paper's temporal blocking exists to improve.  Naive runs ``t`` full
 load+store passes over the domain; the blocked kernel runs one pass whose
 loads are inflated only by the halo-exact rim fetch.  The inflation is
-derived from ``ops.launch_geometry`` — the tile the launch *actually*
-resolves (plan wiring, halo rounding and XY tiling included) — not from
-the plan-less default tile constants.
+derived from ``repro.api.resolve_geometry`` — the tile the launch
+*actually* resolves (plan wiring, halo rounding and XY tiling included) —
+not from the plan-less default tile constants.
 
 ``sweep/`` rows measure the zero-copy multi-sweep executor against the
-naive driver loop (one ``ebisu_stencil`` call per sweep, re-padding and
+naive driver loop (one fresh compile-and-apply per sweep, re-padding and
 re-dispatching every ``t`` steps) at ``T`` total time steps.
 
 ``program/`` rows measure the compile-once front door: steady-state
-per-call time of a held ``StencilProgram`` handle vs the legacy
-``ops.ebisu_stencil`` per-call path (which re-resolves the program from
-the bounded caches on every call), and one vmapped ``run_batched``
-dispatch vs a Python loop of per-field ``run`` calls.
+per-call time of a held ``StencilProgram`` handle vs the per-call path
+(re-resolving the program from the bounded caches on every call — what
+the deprecated ``ops.ebisu_stencil`` shim does, minus its warning), and
+one vmapped ``run_batched`` dispatch vs a Python loop of per-field
+``run`` calls.
+
+Everything here drives ``repro.api`` directly — no deprecated ``ops`` /
+``sweep`` shims, so tier-1 and bench output stay DeprecationWarning-clean
+while the measured dispatch paths are unchanged.
 """
 from __future__ import annotations
 
-import warnings
-
 from benchmarks.common import time_fn, time_pair
-from repro.api import compile_stencil, define_stencil
+from repro.api import compile_stencil, define_stencil, resolve_geometry, \
+    sweep_schedule
 from repro.core.stencil_spec import StencilSpec, get
-from repro.kernels import ops, sweep
+from repro.kernels import ref
 from repro.stencils.data import init_domain
 
 
@@ -33,7 +37,7 @@ def reads_per_elem(spec: StencilSpec, t: int, shape: tuple[int, ...],
                    plan=None) -> float:
     """Input loads per output element per blocked sweep, halo-exact, for
     the tile geometry this launch resolves."""
-    g = ops.launch_geometry(spec, t, shape, plan=plan)
+    g = resolve_geometry(spec, t, shape, plan=plan)
     return g["fetched_cells"] / g["body_cells"]
 
 
@@ -71,81 +75,80 @@ CUSTOM_CASE = (define_stencil(
      ((1, 0), 0.08), ((-1, 0), 0.04)), name="aniso5"), (256, 256), 6)
 
 
+def _percall_apply(spec, shape, t):
+    """The per-call dispatch path (what the deprecated shim did, minus
+    its warning): re-resolve the program from the bounded caches on
+    every call, then apply — plan-less legacy tiles."""
+    def call(x):
+        return compile_stencil(spec, shape, t=t, plan=None,
+                               interpret=True).apply(x)
+    return call
+
+
 def _program_rows():
     import jax.numpy as jnp
 
     out = []
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        for name, shape, t in PROGRAM_CASES:
-            spec = get(name)
-            x = init_domain(spec, shape)
-            # legacy tiles (plan=None) on both sides: the delta isolates
-            # the per-call resolution overhead, not a tile change
-            prog = compile_stencil(spec, shape, t=t, plan=None,
-                                   interpret=True)
-            prog.apply(x)                       # compile outside timing
-            us_prog, us_legacy = time_pair(
-                lambda: prog.apply(x),
-                lambda: ops.ebisu_stencil(x, spec, t, interpret=True))
-            out.append((f"program/{name}-t{t}", us_prog,
-                        f"legacy_percall_us={us_legacy:.0f}|"
-                        f"overhead={us_legacy / us_prog - 1:+.1%}|"
-                        f"note=held-handle-vs-legacy-shim-steady-state"))
-
-        name, shape, t, total, nb = BATCH_CASE
+    for name, shape, t in PROGRAM_CASES:
         spec = get(name)
-        xs = jnp.stack([init_domain(spec, shape, seed=i)
-                        for i in range(nb)])
-        prog = compile_stencil(spec, shape, t=t, interpret=True)
-        prog.run_batched(xs, total)             # compile outside timing
+        x = init_domain(spec, shape)
+        # legacy tiles (plan=None) on both sides: the delta isolates
+        # the per-call resolution overhead, not a tile change
+        prog = compile_stencil(spec, shape, t=t, plan=None,
+                               interpret=True)
+        percall = _percall_apply(spec, shape, t)
+        prog.apply(x)                       # compile outside timing
+        us_prog, us_legacy = time_pair(
+            lambda: prog.apply(x), lambda: percall(x))
+        out.append((f"program/{name}-t{t}", us_prog,
+                    f"legacy_percall_us={us_legacy:.0f}|"
+                    f"overhead={us_legacy / us_prog - 1:+.1%}|"
+                    f"note=held-handle-vs-legacy-shim-steady-state"))
 
-        def looped():
-            return [prog.run(xs[i], total) for i in range(nb)]
+    name, shape, t, total, nb = BATCH_CASE
+    spec = get(name)
+    xs = jnp.stack([init_domain(spec, shape, seed=i)
+                    for i in range(nb)])
+    prog = compile_stencil(spec, shape, t=t, interpret=True)
+    prog.run_batched(xs, total)             # compile outside timing
 
-        us_batched, us_looped = time_pair(
-            lambda: prog.run_batched(xs, total), looped)
-        out.append((f"program/{name}-batch{nb}-T{total}", us_batched,
-                    f"looped_us={us_looped:.0f}|"
-                    f"speedup={us_looped / us_batched:.2f}x|"
-                    f"note=one-vmapped-dispatch-vs-python-loop-of-run"))
+    def looped():
+        return [prog.run(xs[i], total) for i in range(nb)]
 
-        # user-defined spec (open definition layer) vs the registry spec
-        # of the same tap shape at the same tile/depth
-        cspec, cshape, ct = CUSTOM_CASE
-        xc = init_domain(cspec, cshape)
-        cprog = compile_stencil(cspec, cshape, t=ct, plan=None,
-                                interpret=True)
-        rprog = compile_stencil(get("j2d5pt"), cshape, t=ct, plan=None,
-                                interpret=True)
-        cprog.apply(xc), rprog.apply(xc)        # compile outside timing
-        us_custom, us_reg = time_pair(lambda: cprog.apply(xc),
-                                      lambda: rprog.apply(xc))
-        out.append((f"custom/{cspec.name}-t{ct}", us_custom,
-                    f"registry_j2d5pt_us={us_reg:.0f}|"
-                    f"overhead={us_custom / us_reg - 1:+.1%}|"
-                    f"note=define_stencil-vs-registry-same-shape"))
+    us_batched, us_looped = time_pair(
+        lambda: prog.run_batched(xs, total), looped)
+    out.append((f"program/{name}-batch{nb}-T{total}", us_batched,
+                f"looped_us={us_looped:.0f}|"
+                f"speedup={us_looped / us_batched:.2f}x|"
+                f"note=one-vmapped-dispatch-vs-python-loop-of-run"))
+
+    # user-defined spec (open definition layer) vs the registry spec
+    # of the same tap shape at the same tile/depth
+    cspec, cshape, ct = CUSTOM_CASE
+    xc = init_domain(cspec, cshape)
+    cprog = compile_stencil(cspec, cshape, t=ct, plan=None,
+                            interpret=True)
+    rprog = compile_stencil(get("j2d5pt"), cshape, t=ct, plan=None,
+                            interpret=True)
+    cprog.apply(xc), rprog.apply(xc)        # compile outside timing
+    us_custom, us_reg = time_pair(lambda: cprog.apply(xc),
+                                  lambda: rprog.apply(xc))
+    out.append((f"custom/{cspec.name}-t{ct}", us_custom,
+                f"registry_j2d5pt_us={us_reg:.0f}|"
+                f"overhead={us_custom / us_reg - 1:+.1%}|"
+                f"note=define_stencil-vs-registry-same-shape"))
     return out
 
 
 def rows():
-    with warnings.catch_warnings():
-        # the kernel/sweep rows intentionally measure the legacy entry
-        # points (trajectory continuity across PRs) — silence their
-        # deprecation notes without leaking the filter process-wide
-        warnings.simplefilter("ignore", DeprecationWarning)
-        return _rows()
-
-
-def _rows():
     out = []
     for name, shape, t in KERNEL_CASES:
         spec = get(name)
         x = init_domain(spec, shape)
-        us_blocked = time_fn(
-            lambda: ops.ebisu_stencil(x, spec, t, interpret=True))
-        us_naive = time_fn(lambda: ops.naive_stencil(x, spec, t))
-        grid = ops.launch_geometry(spec, t, shape)["grid"]
+        percall = _percall_apply(spec, shape, t)
+        us_blocked = time_fn(lambda: percall(x))
+        us_naive = time_fn(lambda: ref.reference(x, spec, t))
+        grid = resolve_geometry(spec, t, shape)["grid"]
         out.append((f"kernel/{name}-t{t}", us_blocked,
                     f"naive_us={us_naive:.0f}|"
                     f"hbm_traffic_ratio={modeled_traffic_ratio(spec, t, shape):.2f}x|"
@@ -156,20 +159,21 @@ def _rows():
     for name, shape, t, total in SWEEP_CASES:
         spec = get(name)
         x = init_domain(spec, shape)
+        prog = compile_stencil(spec, shape, t=t, interpret=True)
+        percall = _percall_apply(spec, shape, t)
 
         def loop():
             v = x
             for _ in range(total // t):
-                v = ops.ebisu_stencil(v, spec, t, interpret=True)
+                v = percall(v)
             return v
 
         us_exec, us_loop = time_pair(
-            lambda: sweep.run_sweeps(x, spec, total, t=t, interpret=True),
-            loop)
+            lambda: prog.run(x, total), loop)
         out.append((f"sweep/{name}-T{total}", us_exec,
                     f"persweep_loop_us={us_loop:.0f}|"
                     f"speedup={us_loop / us_exec:.2f}x|"
-                    f"sweeps={len(sweep.sweep_schedule(total, t))}|"
+                    f"sweeps={len(sweep_schedule(total, t))}|"
                     f"note=plan-wired-executor-vs-planless-persweep-calls"))
 
     out.extend(_program_rows())

@@ -90,9 +90,9 @@ def main() -> None:
         ap.error("--passes must be >= 1 (an empty entry would vacuously "
                  "pass the bench gate)")
 
-    from benchmarks import (bench_kernels, fig7_speedups, fig8_resources,
-                            fig9_breakdown, lm_roofline, table2_suite,
-                            table3_depths)
+    from benchmarks import (bench_kernels, bench_sharded, fig7_speedups,
+                            fig8_resources, fig9_breakdown, lm_roofline,
+                            table2_suite, table3_depths)
     from benchmarks.common import emit
 
     modules = [
@@ -102,6 +102,7 @@ def main() -> None:
         ("fig8", fig8_resources),
         ("fig9", fig9_breakdown),
         ("kernels", bench_kernels),
+        ("sharded", bench_sharded),
         ("lm_roofline", lm_roofline),
     ]
     print("name,us_per_call,derived")

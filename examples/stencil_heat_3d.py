@@ -5,10 +5,11 @@ Run:  PYTHONPATH=src python examples/stencil_heat_3d.py
 """
 import jax.numpy as jnp
 
+from repro.api import compile_stencil
 from repro.core import roofline as rl
 from repro.core.planner import plan
 from repro.core.stencil_spec import get
-from repro.kernels import ops, ref
+from repro.kernels import ref
 from repro.stencils.data import init_domain
 
 spec = get("j3d7pt")
@@ -21,7 +22,7 @@ print(f"-> the paper's thesis on TPU: {p_tpu.vmem_bytes/2**20:.0f} MiB VMEM "
 
 x = init_domain(spec, (40, 24, 32))
 t = 4
-y = ops.ebisu_stencil(x, spec, t, interpret=True)
+y = compile_stencil(spec, x.shape, t=t, interpret=True).apply(x)
 err = float(jnp.abs(y - ref.reference(x, spec, t)).max())
 print(f"streaming multi-queue kernel, t={t}: maxerr={err:.2e}")
 assert err < 1e-4

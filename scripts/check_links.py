@@ -1,0 +1,95 @@
+#!/usr/bin/env python
+"""Markdown link check for the docs tree (CI: tier1.yml docs job).
+
+Validates every ``[text](target)`` in docs/*.md plus the root markdown
+files:
+
+  * relative file targets must exist (resolved from the linking file);
+  * ``#anchor`` fragments must match a heading in the target file,
+    GitHub-slugged (lowercase, spaces->dashes, punctuation dropped);
+  * http(s) links are NOT fetched (CI must not depend on the network) —
+    they are only counted.
+
+Exit 1 with a per-link report when anything is broken.
+
+    python scripts/check_links.py          # from the repo root
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+FILES = ["README.md", "DESIGN.md", "ROADMAP.md", "PAPER.md", "PAPERS.md"]
+DOCS = os.path.join(ROOT, "docs")
+
+LINK_RE = re.compile(r"(?<!!)\[([^\]]+)\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown, lowercase, spaces to dashes,
+    drop everything that is not a word char, dash, or space."""
+    text = re.sub(r"[`*_]", "", heading).strip()
+    text = re.sub(r"[^\w\- §.]", "", text, flags=re.UNICODE)
+    text = re.sub(r"[ §.]+", " ", text).strip()
+    return text.lower().replace(" ", "-")
+
+
+def anchors_of(path: str) -> set[str]:
+    with open(path, encoding="utf-8") as f:
+        body = CODE_FENCE_RE.sub("", f.read())
+    return {github_slug(h) for h in HEADING_RE.findall(body)}
+
+
+def check_file(path: str) -> list[str]:
+    errors = []
+    with open(path, encoding="utf-8") as f:
+        body = CODE_FENCE_RE.sub("", f.read())
+    rel = os.path.relpath(path, ROOT)
+    for text, target in LINK_RE.findall(body):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        base, _, frag = target.partition("#")
+        dest = path if not base else os.path.normpath(
+            os.path.join(os.path.dirname(path), base))
+        if not os.path.exists(dest):
+            errors.append(f"{rel}: [{text}]({target}) — missing file "
+                          f"{os.path.relpath(dest, ROOT)}")
+            continue
+        if frag and dest.endswith(".md"):
+            got = anchors_of(dest)
+            if frag not in got:
+                close = [a for a in got if frag.split("-")[0] in a][:3]
+                errors.append(
+                    f"{rel}: [{text}]({target}) — no heading for "
+                    f"#{frag}" + (f" (near: {close})" if close else ""))
+    return errors
+
+
+def main() -> int:
+    files = [os.path.join(ROOT, f) for f in FILES
+             if os.path.exists(os.path.join(ROOT, f))]
+    if os.path.isdir(DOCS):
+        files += sorted(os.path.join(DOCS, f) for f in os.listdir(DOCS)
+                        if f.endswith(".md"))
+    errors = []
+    n_links = 0
+    for path in files:
+        with open(path, encoding="utf-8") as f:
+            n_links += len(LINK_RE.findall(CODE_FENCE_RE.sub("", f.read())))
+        errors += check_file(path)
+    if errors:
+        print(f"check_links: {len(errors)} broken of {n_links} links:")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"check_links: OK — {n_links} links across {len(files)} files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,6 +5,13 @@
     prog = compile_stencil(spec, shape, t=4, boundary=Boundary.periodic())
     y = prog.run(x, T=64)
 
+Multi-device: pass ``mesh=`` and call ``run_sharded`` — ghost zones are
+exchanged once per temporal block instead of once per step
+(``docs/sharding.md``):
+
+    prog = compile_stencil(spec, shape, t=4, mesh=(2, 4))   # 8 devices
+    y = prog.run_sharded(x, 64)          # 16 exchange rounds, not 64
+
 The definition layer is open: ``define_stencil`` / ``from_operator``
 build arbitrary user stencils with derived cost models; the Table-2
 registry (``repro.core.stencil_spec.get``) is just nine pre-built specs
@@ -19,6 +26,8 @@ from repro.api.program import (ProgramCache, StencilProgram, cache_stats,
                                clear_caches, compile_stencil, plan_bucketed,
                                resolve_compute_dtype, resolve_geometry,
                                run_sweeps_padded, sweep_once, sweep_schedule)
+from repro.api.sharded import (count_ppermutes, planned_exchange_rounds,
+                               resolve_mesh, shard_extents)
 from repro.core.stencil_spec import StencilSpec, define_stencil
 
 __all__ = [
@@ -29,13 +38,17 @@ __all__ = [
     "cache_stats",
     "clear_caches",
     "compile_stencil",
+    "count_ppermutes",
     "define_stencil",
     "from_operator",
     "parse_taps",
     "plan_bucketed",
+    "planned_exchange_rounds",
     "resolve_compute_dtype",
     "resolve_geometry",
+    "resolve_mesh",
     "run_sweeps_padded",
+    "shard_extents",
     "spec_from_json",
     "sweep_once",
     "sweep_schedule",

@@ -54,6 +54,11 @@ class Boundary:
 
     Immutable and hashable — it is part of every program/runner cache key
     and is passed to the jitted kernels as a static argument.
+
+        from repro.api import Boundary, compile_stencil
+        prog = compile_stencil(spec, (512, 512), t=4,
+                               boundary=Boundary.periodic())
+        y = prog.run(x, 64)         # torus domain, validated at compile
     """
 
     kind: str

@@ -101,7 +101,12 @@ OPERATORS = {"laplacian": laplacian, "diffusion": diffusion, "blur": blur,
 
 def from_operator(kind: str, **params) -> StencilSpec:
     """Build a spec from a named operator: laplacian | diffusion | blur |
-    star | box (each takes ``ndim``/``radius`` plus its own knobs)."""
+    star | box (each takes ``ndim``/``radius`` plus its own knobs).
+
+        from repro.api import compile_stencil, from_operator
+        heat = from_operator("diffusion", ndim=3, alpha=0.1)
+        prog = compile_stencil(heat, (64, 64, 64), t=2)
+    """
     try:
         build = OPERATORS[kind]
     except KeyError:
@@ -113,7 +118,11 @@ def from_operator(kind: str, **params) -> StencilSpec:
 # ------------------------------------------------------------ CLI adapters --
 def parse_taps(text: str):
     """Parse a JSON tap list ``[[[dz, dy, dx], coeff], ...]`` (offsets of
-    any supported arity) into the tuple form ``define_stencil`` takes."""
+    any supported arity) into the tuple form ``define_stencil`` takes.
+
+        from repro.api import define_stencil, parse_taps
+        spec = define_stencil(parse_taps('[[[0,0],0.6],[[0,1],0.4]]'))
+    """
     try:
         raw = json.loads(text)
     except ValueError as e:

@@ -72,7 +72,12 @@ class ProgramCache:
     """Bounded LRU cache with hit/miss counters — the explicit replacement
     for the module-global plan/launch dicts the executor used to hide
     state in.  Eviction only drops memoization: handles already returned
-    stay valid."""
+    stay valid.
+
+        c = ProgramCache(maxsize=2, name="demo")
+        c.get_or_build("k", lambda: 42)    # -> 42 (miss, built)
+        c.get("k"), c.stats()["hits"]      # -> 42, 1
+    """
 
     def __init__(self, maxsize: int = 128, name: str = ""):
         if maxsize < 1:
@@ -129,7 +134,12 @@ RUNNER_CACHE = ProgramCache(128, "runners")    # jitted runners per launch
 
 
 def cache_stats() -> dict:
-    """Hit/miss/size counters for all three bounded caches."""
+    """Hit/miss/size counters for all three bounded caches.
+
+        from repro.api import cache_stats, clear_caches
+        cache_stats()["plans"]   # {'name': 'plans', 'size': ..., ...}
+        clear_caches()           # drop memoization (handles stay valid)
+    """
     return {c.name: c.stats()
             for c in (PROGRAM_CACHE, PLAN_CACHE, RUNNER_CACHE)}
 
@@ -146,7 +156,11 @@ def plan_bucketed(spec: StencilSpec, shape: tuple[int, ...],
     domains plans once per bucket.  Keyed on ``spec.signature`` (the tap
     set plus the cost-model numbers), NOT the registry name: user-defined
     specs plan without any registry lookup, and two differently-named
-    specs with identical structure share one plan."""
+    specs with identical structure share one plan.
+
+        p = plan_bucketed(get("j2d5pt"), (512, 512))
+        p.t, p.block          # §6.2 depth, §6.4 tile
+    """
     bucket = tuple(_pad_to(d, _BUCKET) for d in shape)
     key = (spec.signature, bucket, hw.name)
     return PLAN_CACHE.get_or_build(
@@ -188,6 +202,9 @@ def resolve_geometry(spec: StencilSpec, t: int, shape: tuple[int, ...], *,
     so modeled traffic is derived from the launch that actually runs —
     not from the plan-less default tile (``fetched_cells``/``body_cells``
     are the halo-exact input cells and output cells per grid step).
+
+        g = resolve_geometry(get("j2d5pt"), 4, (512, 512))
+        g["grid"], g["block"], g["halo"]    # what apply() will launch
     """
     req = _tile_request(spec, t, plan, mode)
     if spec.ndim == 2 and mode != "stream":
@@ -253,7 +270,11 @@ def sweep_once(x: jnp.ndarray, spec: StencilSpec, t: int, *,
 # ===================================================== multi-sweep runner ==
 def sweep_schedule(total_t: int, t: int) -> tuple[int, ...]:
     """Per-sweep depths covering ``total_t`` steps: full-depth sweeps plus
-    one shallower remainder sweep when ``t`` does not divide ``total_t``."""
+    one shallower remainder sweep when ``t`` does not divide ``total_t``.
+
+        sweep_schedule(10, 4)    # -> (4, 4, 2)
+        sweep_schedule(8, 4)     # -> (4, 4)
+    """
     assert total_t >= 0 and t >= 1
     q, r = divmod(total_t, t)
     return (t,) * q + ((r,) if r else ())
@@ -517,13 +538,19 @@ def _plan_key(plan: EbisuPlan | None):
 
 class StencilProgram:
     """An immutable compiled stencil: spec + domain shape + §6 plan +
-    boundary + launch mode, with memoized runners.  Construct via
-    :func:`compile_stencil`."""
+    boundary + launch mode (+ optional device mesh), with memoized
+    runners.  Construct via :func:`compile_stencil`:
+
+        prog = compile_stencil(get("j2d5pt"), (512, 512), t=4)
+        y  = prog.apply(x)            # one temporally-blocked sweep
+        y  = prog.run(x, 64)          # 64 steps under one jit
+        ys = prog.run_batched(xs, 64) # leading batch axis, one dispatch
+    """
 
     def __init__(self, key, spec: StencilSpec, shape: tuple[int, ...],
                  dtype, t: int, plan: EbisuPlan | None,
                  hw: rl.HardwareModel, boundary: Boundary, mode: str,
-                 interpret: bool, compute_dtype=None):
+                 interpret: bool, compute_dtype=None, mesh=None):
         self._key = key
         self.spec = spec
         self.shape = shape
@@ -534,6 +561,7 @@ class StencilProgram:
         self.boundary = boundary
         self.mode = mode
         self.interpret = interpret
+        self.mesh = mesh
         self.compute_dtype = (jnp.dtype(compute_dtype) if compute_dtype
                               else jnp.float32)
 
@@ -549,7 +577,11 @@ class StencilProgram:
 
     def apply(self, x: jnp.ndarray, t: int | None = None) -> jnp.ndarray:
         """One temporally-blocked sweep of depth ``t`` (default: the
-        program's compiled depth)."""
+        program's compiled depth).
+
+            y = prog.apply(x)        # == t plain steps, one memory pass
+            y = prog.apply(x, t=2)   # off-plan depth, separately cached
+        """
         self._check(x)
         depth = self.t if t is None else t
         if depth < 1:
@@ -579,7 +611,12 @@ class StencilProgram:
     def run(self, x: jnp.ndarray, total_t: int) -> jnp.ndarray:
         """``total_t`` steps as chained temporally-blocked sweeps under a
         single cached jit — the zero-copy executor (remainder sweep
-        included when the program depth does not divide ``total_t``)."""
+        included when the program depth does not divide ``total_t``).
+
+            prog = compile_stencil(spec, x.shape, t=4)
+            y = prog.run(x, 64)     # 16 sweeps: pad once, chain, crop
+            y = prog.run(x, 10)     # sweeps of depth 4, 4, then 2
+        """
         self._check(x)
         if total_t == 0:
             return x
@@ -592,7 +629,11 @@ class StencilProgram:
                     total_t: int | None = None) -> jnp.ndarray:
         """A leading batch axis of independent fields through ONE vmapped
         padded runner — a single jitted dispatch for the whole batch,
-        instead of a Python loop of per-field launches."""
+        instead of a Python loop of per-field launches.
+
+            xs = jnp.stack([x0, x1, x2])        # (3, *prog.shape)
+            ys = prog.run_batched(xs, 64)       # one dispatch, 3 fields
+        """
         self._check(xs, batched=True)
         total_t = self.t if total_t is None else total_t
         if total_t == 0:
@@ -600,6 +641,45 @@ class StencilProgram:
         fn = RUNNER_CACHE.get_or_build(
             (self._key, "batched", total_t),
             lambda: jax.jit(jax.vmap(self._run_fn(total_t))))
+        return fn(xs)
+
+    def run_sharded(self, x: jnp.ndarray, total_t: int) -> jnp.ndarray:
+        """``total_t`` steps over the program's device mesh, exchanging
+        deep ghost zones **once per temporal block** instead of once per
+        step (DESIGN.md §12; guide: ``docs/sharding.md``).
+
+        Each device holds one uniform shard (mesh axis ``k`` over tensor
+        dim ``k``); per block of depth ``d``, neighbor shards swap
+        ``d·radius``-deep halo slabs (one ``ppermute`` round per sharded
+        dim, corners via two hops) and run the trapezoid-narrowed chain
+        locally.  The whole schedule — remainder block included — is one
+        cached jit; the operand buffer is donated to it on backends that
+        support donation (pass ``x.copy()`` to keep ``x`` alive there).
+        A mesh of total size 1 falls back transparently to :meth:`run`.
+
+            prog = compile_stencil(spec, (256, 512), t=4, mesh=(2, 4))
+            y = prog.run_sharded(x, 64)       # 16 exchange rounds, not 64
+
+        Requires a program compiled with ``mesh=``; the output is a
+        global ``jax.Array`` sharded like the input placement.
+        """
+        self._check(x)
+        if self.mesh is None:
+            raise ValueError(
+                "run_sharded needs a mesh-compiled program: "
+                "compile_stencil(spec, shape, mesh=(2, 4)) or mesh=8 — "
+                "see docs/sharding.md")
+        if total_t == 0:
+            return x
+        if self.mesh.size == 1:                 # 1-device mesh: no seams
+            return self.run(x, total_t)
+        from repro.api import sharded
+        fn = RUNNER_CACHE.get_or_build(
+            (self._key, "sharded", total_t),
+            lambda: jax.jit(
+                sharded.build_sharded_runner(self, total_t),
+                donate_argnums=(0,) if _supports_donation() else ()))
+        xs = jax.device_put(x, sharded.operand_sharding(self))
         return fn(xs)
 
     def run_padded(self, xp: jnp.ndarray, total_t: int) -> jnp.ndarray:
@@ -657,11 +737,13 @@ class StencilProgram:
         return cache_stats()
 
     def __repr__(self) -> str:
+        mesh = (f", mesh={dict(self.mesh.shape)}" if self.mesh is not None
+                else "")
         return (f"StencilProgram({self.spec.name}, shape={self.shape}, "
                 f"t={self.t}, boundary={self.boundary!r}, "
                 f"mode={self.mode!r}, hw={self.hw.name}, "
                 f"dtype={self.dtype.name}/{self.compute_dtype.name}, "
-                f"interpret={self.interpret})")
+                f"interpret={self.interpret}{mesh})")
 
 
 def resolve_compute_dtype(dtype, compute_dtype=None):
@@ -669,6 +751,9 @@ def resolve_compute_dtype(dtype, compute_dtype=None):
     else in the storage dtype promoted to at least float32 (bf16/f16
     fields are stored narrow but stepped in f32 — one rounding at the
     end instead of one per sweep; f64 storage computes in f64).
+
+        resolve_compute_dtype(jnp.bfloat16)              # -> float32
+        resolve_compute_dtype(jnp.float32, jnp.float64)  # -> float64
     """
     if compute_dtype is not None:
         cd = jnp.dtype(compute_dtype)
@@ -690,8 +775,14 @@ def compile_stencil(spec: StencilSpec, shape: tuple[int, ...], *,
                     boundary: Boundary | None = None, mode: str = "fused",
                     interpret: bool | None = None,
                     plan: EbisuPlan | None | str = "auto",
-                    compute_dtype=None) -> StencilProgram:
+                    compute_dtype=None, mesh=None) -> StencilProgram:
     """Compile a stencil to an immutable :class:`StencilProgram`.
+
+        from repro.api import Boundary, compile_stencil
+        from repro.core.stencil_spec import get
+        prog = compile_stencil(get("j3d7pt"), (256, 288, 384), t=4,
+                               boundary=Boundary.periodic())
+        y = prog.run(x, 64)
 
     Accepts ANY validated :class:`StencilSpec` — the Table-2 registry and
     ``repro.api.define_stencil`` products are equals here: the plan is
@@ -712,6 +803,17 @@ def compile_stencil(spec: StencilSpec, shape: tuple[int, ...], *,
     choice).  ``plan`` is normally derived ("auto"); pass an explicit
     ``EbisuPlan`` to pin tiles (autotuning), or ``None`` for the legacy
     request-default tiles the deprecated entry points used.
+
+    ``mesh`` (a ``jax.sharding.Mesh``, an int, or a tuple — mesh axis
+    ``k`` shards tensor dim ``k``) makes the program multi-device: the §6
+    plan is resolved **per shard** (domain/mesh, since each device sees
+    one shard plus its ``t·radius`` block halo), shard uniformity and
+    halo-fit are validated here with the fix spelled out, and
+    :meth:`StencilProgram.run_sharded` becomes available
+    (DESIGN.md §12, guide in ``docs/sharding.md``)::
+
+        prog = compile_stencil(spec, (256, 512), t=4, mesh=(2, 4))
+        y = prog.run_sharded(x, 64)     # one halo exchange per 4 steps
     """
     validate_spec(spec)
     shape = tuple(int(n) for n in shape)
@@ -726,23 +828,36 @@ def compile_stencil(spec: StencilSpec, shape: tuple[int, ...], *,
     cdtype = resolve_compute_dtype(dtype, compute_dtype)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    from repro.api import sharded as _sharded
+    mesh = _sharded.resolve_mesh(mesh, spec.ndim)
+    plan_shape = shape
+    if mesh is not None:
+        # shard uniformity first (depth-1 halo fit is a subset of the
+        # full-depth check below), then the per-shard planning pass:
+        # each device is one big tile — plan for the shard it owns, not
+        # the global domain (DESIGN.md §12)
+        _sharded.validate_mesh_for(spec, shape, mesh, 1, boundary)
+        plan_shape = _sharded.shard_extents(shape, mesh)
     if isinstance(plan, str):
         if plan != "auto":
             raise ValueError(f"plan must be an EbisuPlan, None, or 'auto'; "
                              f"got {plan!r}")
-        plan = plan_bucketed(spec, shape, hw)
+        plan = plan_bucketed(spec, plan_shape, hw)
     depth = t if t is not None else (plan.t if plan is not None else 1)
     if depth < 1:
         raise ValueError(f"temporal depth must be >= 1, got {depth}")
     boundary.validate_for(spec, t=depth)
+    if mesh is not None:
+        _sharded.validate_mesh_for(spec, shape, mesh, depth, boundary)
     key = (spec, shape, jnp.dtype(dtype).name, depth, hw.name,
-           boundary, mode, bool(interpret), _plan_key(plan), cdtype.name)
+           boundary, mode, bool(interpret), _plan_key(plan), cdtype.name,
+           _sharded.mesh_key(mesh))
     cached = PROGRAM_CACHE.get(key)
     if cached is not None:
         return cached
     prog = StencilProgram(key, spec, shape, jnp.dtype(dtype), depth, plan,
                           hw, boundary, mode, bool(interpret),
-                          compute_dtype=cdtype)
+                          compute_dtype=cdtype, mesh=mesh)
     PROGRAM_CACHE.put(key, prog)
     return prog
 
@@ -750,6 +865,13 @@ def compile_stencil(spec: StencilSpec, shape: tuple[int, ...], *,
 def deprecated_entry(name: str, replacement: str) -> None:
     """One-per-call-site deprecation notice for the legacy entry points
     (policy in README.md: shims stay for two PR cycles, geometry/dispatch
-    already lives here)."""
+    already lives here).
+
+    Emitted strictly at *call* time, never at import time — importing
+    ``repro.kernels.ops`` / ``repro.kernels.sweep`` stays silent, so
+    modules that merely transit the legacy names (test collection,
+    introspection) produce no warnings; ``benchmarks/`` drives
+    ``repro.api`` directly and emits none at all.
+    """
     warnings.warn(f"{name} is deprecated; use {replacement} "
                   "(repro.api) instead", DeprecationWarning, stacklevel=3)

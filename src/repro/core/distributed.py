@@ -36,6 +36,22 @@ from repro.core.stencil_spec import StencilSpec
 from repro.kernels.ref import stencil_step
 
 
+def shard_map_compat(f, mesh: Mesh, in_specs, out_specs):
+    """``shard_map`` across jax versions.
+
+    Newer jax exposes ``jax.shard_map`` (with ``check_vma``); the pinned
+    0.4.x toolchain has ``jax.experimental.shard_map`` (with the older
+    ``check_rep`` spelling).  Both checks are disabled: the halo-exchange
+    bodies are intentionally per-shard-divergent (edge shards differ).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
 def _axis_size(mesh, ax) -> int:
     if isinstance(ax, str):
         return mesh.shape[ax]
@@ -54,27 +70,32 @@ def _axis_index(ax):
 
 
 def _exchange_one_axis(local: jnp.ndarray, dim: int, h: int, axis_name,
-                       n: int):
+                       n: int, *, periodic: bool = False):
     """Extend ``local`` by h-deep halos along ``dim`` from mesh neighbors.
 
-    Shards at the ends receive zeros (ppermute drops sourceless outputs),
-    which is exactly the zero-extension the global boundary needs.
-    ``axis_name`` may be a tuple of mesh axes (flattened ordering).
+    Open chain (default): shards at the ends receive zeros (ppermute
+    drops sourceless outputs), which is exactly the zero-extension the
+    global Dirichlet boundary needs.  ``periodic=True`` closes the chain
+    into a ring — shard 0's low halo is shard n−1's last rows, realizing
+    the torus seam with the same one-round exchange.  ``axis_name`` may
+    be a tuple of mesh axes (flattened ordering).
     """
     if n == 1:
         pad = [(0, 0)] * local.ndim
         pad[dim] = (h, h)
-        return jnp.pad(local, pad)
+        mode = dict(mode="wrap") if periodic else {}
+        return jnp.pad(local, pad, **mode)
     idx_lo = [slice(None)] * local.ndim
     idx_lo[dim] = slice(0, h)
     idx_hi = [slice(None)] * local.ndim
     idx_hi[dim] = slice(local.shape[dim] - h, local.shape[dim])
+    last = n if periodic else n - 1    # ring closes the (n-1, 0) hop
     # shard i's top halo <- shard i-1's last rows (data flows "down": i->i+1)
     from_prev = jax.lax.ppermute(local[tuple(idx_hi)], axis_name,
-                                 [(i, i + 1) for i in range(n - 1)])
+                                 [(i, (i + 1) % n) for i in range(last)])
     # shard i's bottom halo <- shard i+1's first rows
     from_next = jax.lax.ppermute(local[tuple(idx_lo)], axis_name,
-                                 [(i + 1, i) for i in range(n - 1)])
+                                 [((i + 1) % n, i) for i in range(last)])
     return jnp.concatenate([from_prev, local, from_next], axis=dim)
 
 
@@ -145,6 +166,6 @@ def make_distributed_stencil(spec: StencilSpec, mesh: Mesh,
             local = ext[tuple(sl)]
         return local
 
-    fn = jax.shard_map(shard_fn, mesh=mesh, in_specs=(pspec,),
-                       out_specs=pspec, check_vma=False)
+    fn = shard_map_compat(shard_fn, mesh, in_specs=(pspec,),
+                          out_specs=pspec)
     return jax.jit(fn), pspec

@@ -10,8 +10,11 @@ geometry.  New code should compile a program instead:
     y = prog.apply(x)            # was: ops.ebisu_stencil(x, spec, t)
 
 Deprecation policy (README.md): these shims keep the seed signatures
-working, emit a ``DeprecationWarning`` once per call site, and will be
-removed two PR cycles after the ``repro.api`` introduction.
+working, emit a ``DeprecationWarning`` once per call site — strictly at
+*call* time, never at import, so transiting this module (test
+collection, introspection) stays silent — and will be removed two PR
+cycles after the ``repro.api`` introduction.  ``benchmarks/`` drives
+``repro.api`` directly and no longer calls these.
 """
 from __future__ import annotations
 

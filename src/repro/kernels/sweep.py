@@ -14,7 +14,9 @@ module keeps the seed call surface working:
     both now alias the bounded LRU :class:`ProgramCache` instances
     (hit/miss counters, ``clear()``) the front door owns.
 
-Deprecation policy in README.md.
+Deprecation policy in README.md; the ``DeprecationWarning`` fires at
+*call* time only (importing this module is silent), and ``benchmarks/``
+drives ``repro.api`` directly rather than these shims.
 """
 from __future__ import annotations
 

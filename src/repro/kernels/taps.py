@@ -1,9 +1,11 @@
 """Unified slice-based tap engine — the one stencil-application core.
 
 Every stencil application in the repo (the 2-D strip kernel, the 3-D
-streamer, and the pure-jnp oracle) goes through this module, so the
-blocked kernels and the reference they are validated against share one
-numerical definition of "apply the taps" (see DESIGN.md §8).
+streamer, the sharded per-shard trapezoid chain of
+``repro.api.sharded`` — DESIGN.md §12.2 — and the pure-jnp oracle) goes
+through this module, so the blocked kernels and the reference they are
+validated against share one numerical definition of "apply the taps"
+(see DESIGN.md §8).
 
 Semantics: *zero-fill* shifts.  ``apply_taps`` treats everything outside
 the array extent as 0 — a static slice of a zero-padded buffer, never

@@ -14,9 +14,12 @@ model is printed so the analytic machinery is inspectable:
         --taps '[[[0,0],0.6],[[0,1],0.1],[[0,-1],0.1],[[1,0],0.1],[[-1,0],0.1]]' --t 2
     python -m repro.launch.stencil_run --spec-json my_stencil.json
 
-``--distributed`` shards the domain over the host mesh and uses the deep-halo
-communication-avoiding schedule; otherwise the compiled program drives the
-Pallas kernels (interpret mode on CPU)."""
+``--mesh ZxY`` compiles the program onto a device mesh and runs it through
+``run_sharded`` — deep ghost zones exchanged once per temporal block
+(``docs/sharding.md``); on a CPU-only host the device count is faked
+automatically.  ``--distributed`` is the older jnp reference scheme over
+the host mesh; otherwise the compiled program drives the Pallas kernels
+(interpret mode on CPU)."""
 from __future__ import annotations
 
 import argparse
@@ -31,6 +34,18 @@ from repro.core import roofline as rl
 from repro.core.stencil_spec import StencilSpec, TABLE2, get
 from repro.kernels import ref
 from repro.stencils.data import init_domain, reduced_domain
+
+
+def parse_mesh(text: str) -> tuple[int, ...]:
+    """'8' | '2x4' | '2,4' → mesh shape tuple (axis k shards tensor dim k)."""
+    try:
+        shape = tuple(int(p) for p in text.replace(",", "x").split("x"))
+        if not shape or any(n < 1 for n in shape):
+            raise ValueError
+        return shape
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"bad mesh {text!r}; use an int ('8') or a shape ('2x4')")
 
 
 def parse_boundary(text: str) -> Boundary:
@@ -102,6 +117,52 @@ def run_single(spec: StencilSpec | str, *, t: int | None = None,
     return y
 
 
+def run_sharded(spec: StencilSpec | str, mesh_shape: tuple[int, ...], *,
+                t: int | None = None, scale: int = 64,
+                boundary: Boundary | None = None, total_t: int | None = None,
+                check: bool = True):
+    """Drive ``compile_stencil(..., mesh=)`` + ``run_sharded`` end-to-end:
+    shard the domain over the mesh, run ``T`` steps with one deep-halo
+    exchange per temporal block, and (optionally) check against the
+    per-step oracle.  Domain dims are rounded up to shard uniformly."""
+    from repro.api import planned_exchange_rounds
+
+    spec = get(spec) if isinstance(spec, str) else spec
+    boundary = boundary or Boundary.dirichlet(0.0)
+    shape = list(reduced_domain(spec, scale))
+    for d, n in enumerate(mesh_shape):
+        # uniform shards, each wide enough for the deep block halo
+        min_shard = (t or 2) * spec.radius + 1
+        shape[d] = n * max(-(-shape[d] // n), min_shard)
+    shape = tuple(shape)
+    if t is None:
+        # default depth: run_single's cap, further bounded so the block
+        # halo t*radius fits inside one shard (one neighbor hop)
+        caps = [shape[d] // n // spec.radius
+                for d, n in enumerate(mesh_shape) if n > 1]
+        cap = min(caps) - (boundary.kind == "reflect") if caps else 6
+        t = max(1, min(6, cap))
+    prog = compile_stencil(spec, shape, t=t, boundary=boundary,
+                           mesh=mesh_shape, interpret=True)
+    total = total_t if total_t is not None else 2 * prog.t + 1
+    x = init_domain(spec, shape)
+    t0 = time.time()
+    y = prog.run_sharded(x, total)
+    y.block_until_ready()
+    dt = time.time() - t0
+    rounds = planned_exchange_rounds(total, prog.t)
+    line = (f"[sharded] {spec.name:11s} domain={shape} "
+            f"mesh={'x'.join(map(str, mesh_shape))} T={total} t={prog.t} "
+            f"exchanges={rounds} (vs {total} per-step) {dt*1e3:.0f}ms")
+    if check:
+        want = ref.reference(x, spec, total, boundary=boundary)
+        err = float(jnp.abs(y - want).max())
+        line += f" maxerr={err:.2e}"
+        assert err < 1e-4
+    print(line, flush=True)
+    return y
+
+
 def run_distributed(name: str, *, t_total: int = 4, t_block: int = 2,
                     scale: int = 64):
     # lazy: the mesh helpers need jax.sharding.AxisType (newer jax); the
@@ -144,6 +205,10 @@ custom stencils from the CLI (derived cost model printed):
   --taps '[[[0,0],0.6],[[0,1],0.1],[[0,-1],0.1],[[1,0],0.1],[[-1,0],0.1]]'
   --spec-json my_stencil.json   # {"taps": [...], "name": ..., ...}
 
+sharded execution over a device mesh (docs/sharding.md):
+  --mesh 2x4                    # one deep-halo exchange per temporal block
+  (CPU hosts fake the device count automatically)
+
 legacy ops.ebisu_stencil / sweep.run_sweeps are deprecated shims over
 compiled programs (policy in README.md)."""
 
@@ -168,10 +233,27 @@ def main():
     ap.add_argument("--boundary", type=parse_boundary, default=None,
                     metavar="dirichlet[:v]|periodic|reflect",
                     help="boundary condition (default zero Dirichlet)")
+    ap.add_argument("--mesh", type=parse_mesh, default=None,
+                    metavar="N|ZxY",
+                    help="device mesh for run_sharded (axis k shards dim k);"
+                         " CPU hosts fake the device count automatically")
+    ap.add_argument("--T", type=int, default=None, dest="total_t",
+                    help="total steps for --mesh runs (default 2*t+1)")
     ap.add_argument("--distributed", action="store_true")
     args = ap.parse_args()
     if args.taps and args.spec_json:
         ap.error("--taps and --spec-json are mutually exclusive")
+    if args.mesh and args.distributed:
+        ap.error("--mesh (run_sharded) and --distributed (jnp reference "
+                 "scheme) are mutually exclusive")
+    if args.mesh:
+        # must happen before the backend initializes (main() is the first
+        # device use); no-op when a device-count flag is already set, and
+        # the forced count only affects the host CPU platform
+        import math
+
+        from repro.launch.mesh import ensure_fake_devices
+        ensure_fake_devices(math.prod(args.mesh))
     if args.taps or args.spec_json:
         if args.distributed:
             ap.error("--distributed drives the Table-2 suite; custom specs "
@@ -179,12 +261,20 @@ def main():
         spec = (define_stencil(parse_taps(args.taps),
                                normalize=args.normalize, name=args.name)
                 if args.taps else spec_from_json(args.spec_json))
-        run_single(spec, t=args.t, scale=args.scale,
-                   boundary=args.boundary, summary=True)
+        if args.mesh:
+            print(cost_summary_line(spec), flush=True)
+            run_sharded(spec, args.mesh, t=args.t, scale=args.scale,
+                        boundary=args.boundary, total_t=args.total_t)
+        else:
+            run_single(spec, t=args.t, scale=args.scale,
+                       boundary=args.boundary, summary=True)
         return
     names = list(TABLE2) if args.stencil == "all" else args.stencil.split(",")
     for n in names:
-        if args.distributed:
+        if args.mesh:
+            run_sharded(n, args.mesh, t=args.t, scale=args.scale,
+                        boundary=args.boundary, total_t=args.total_t)
+        elif args.distributed:
             run_distributed(n, scale=args.scale)
         else:
             run_single(n, t=args.t, scale=args.scale,
