@@ -4,7 +4,9 @@ Prints ``name,us_per_call,derived`` CSV.  Run:
     PYTHONPATH=src python -m benchmarks.run [--only <prefix>]
 
 Kernel rows are additionally persisted (appended) to ``BENCH_kernels.json``
-at the repo root so the perf trajectory is tracked across PRs.
+and serving rows to ``BENCH_serve.json`` at the repo root so the perf
+trajectory is tracked across PRs (``scripts/bench_gate.py --file ...``
+compares the newest two entries of either file).
 """
 from __future__ import annotations
 
@@ -17,6 +19,9 @@ import time
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_JSON = os.path.join(_ROOT, "BENCH_kernels.json")
+# per-family persistence: families absent here print CSV only
+PERSIST_FILES = {"kernels": BENCH_JSON,
+                 "serve": os.path.join(_ROOT, "BENCH_serve.json")}
 
 
 def _git_rev() -> str:
@@ -32,12 +37,12 @@ def _git_rev() -> str:
         return "unknown"
 
 
-def persist_kernel_rows(rows) -> None:
-    """Append this run's kernel rows to BENCH_kernels.json (history kept)."""
+def persist_rows(rows, path: str = BENCH_JSON) -> None:
+    """Append this run's rows to a bench-history JSON (history kept)."""
     hist = []
-    if os.path.exists(BENCH_JSON):
+    if os.path.exists(path):
         try:
-            with open(BENCH_JSON) as f:
+            with open(path) as f:
                 hist = json.load(f).get("entries", [])
         except (OSError, ValueError):
             hist = []
@@ -49,9 +54,14 @@ def persist_kernel_rows(rows) -> None:
                  for name, us, derived in rows},
     }
     hist.append(entry)
-    with open(BENCH_JSON, "w") as f:
+    with open(path, "w") as f:
         json.dump({"entries": hist}, f, indent=2)
         f.write("\n")
+
+
+# back-compat alias (tier1 docs/scripts referenced the kernel name)
+def persist_kernel_rows(rows) -> None:
+    persist_rows(rows, BENCH_JSON)
 
 
 def min_merge(passes: list[list]) -> list:
@@ -90,9 +100,9 @@ def main() -> None:
         ap.error("--passes must be >= 1 (an empty entry would vacuously "
                  "pass the bench gate)")
 
-    from benchmarks import (bench_kernels, bench_sharded, fig7_speedups,
-                            fig8_resources, fig9_breakdown, lm_roofline,
-                            table2_suite, table3_depths)
+    from benchmarks import (bench_kernels, bench_serve, bench_sharded,
+                            fig7_speedups, fig8_resources, fig9_breakdown,
+                            lm_roofline, table2_suite, table3_depths)
     from benchmarks.common import emit
 
     modules = [
@@ -103,6 +113,7 @@ def main() -> None:
         ("fig9", fig9_breakdown),
         ("kernels", bench_kernels),
         ("sharded", bench_sharded),
+        ("serve", bench_serve),
         ("lm_roofline", lm_roofline),
     ]
     print("name,us_per_call,derived")
@@ -113,8 +124,8 @@ def main() -> None:
         try:
             rows = min_merge([mod.rows() for _ in range(args.passes)])
             emit(rows)
-            if name == "kernels" and not args.no_persist:
-                persist_kernel_rows(rows)
+            if name in PERSIST_FILES and not args.no_persist:
+                persist_rows(rows, PERSIST_FILES[name])
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)

@@ -6,6 +6,15 @@ than ``--max-regress`` (default 15%) in wall time.  New rows (no
 predecessor) and removed rows are reported but never fail the gate —
 the trajectory may legitimately add or drop rows across PRs.
 
+Machine-load normalization: kernel rows carry ``naive_us=`` in their
+derived column — the wall time of the UNTOUCHED naive reference on the
+same run.  Nobody optimizes the naive loop, so when its time moves
+between two entries the machine moved, not the code.  The gate divides
+each new row's wall time by the median ``new naive / old naive`` ratio
+before applying the threshold (and prints the factor it used), so a
+slow CI box doesn't fail healthy kernels and a fast one doesn't hide a
+real regression.  Entries without ``naive_us=`` rows gate unnormalized.
+
 Opt-in from the tier-1 gate:  ``bash scripts/tier1.sh --bench-gate``
 (run ``PYTHONPATH=src python -m benchmarks.run --only kernels`` first to
 append a fresh entry; CPU-interpret wall times are noisy, so the gate is
@@ -19,6 +28,33 @@ import os
 import sys
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _naive_us(row: dict) -> float | None:
+    """Pull the naive-reference control time out of a row's derived column."""
+    for part in str(row.get("derived", "")).split("|"):
+        if part.startswith("naive_us="):
+            try:
+                return float(part.split("=", 1)[1])
+            except ValueError:
+                return None
+    return None
+
+
+def load_factor(prev_rows: dict, new_rows: dict) -> tuple[float, int]:
+    """Median new/old ratio of the naive-reference control across rows
+    present in both entries; ``(1.0, 0)`` when no row carries one."""
+    ratios = sorted(
+        _naive_us(new_rows[name]) / _naive_us(prev_rows[name])
+        for name in prev_rows
+        if name in new_rows
+        and _naive_us(prev_rows[name]) and _naive_us(new_rows[name]))
+    if not ratios:
+        return 1.0, 0
+    mid = len(ratios) // 2
+    med = (ratios[mid] if len(ratios) % 2
+           else 0.5 * (ratios[mid - 1] + ratios[mid]))
+    return med, len(ratios)
 
 
 def gate(path: str, max_regress: float) -> int:
@@ -36,13 +72,22 @@ def gate(path: str, max_regress: float) -> int:
     print(f"bench-gate: {prev['rev']} ({prev['timestamp']}) -> "
           f"{new['rev']} ({new['timestamp']}), "
           f"max regression {max_regress:.0%}")
+    load, n_controls = load_factor(prev["rows"], new["rows"])
+    if n_controls:
+        print(f"bench-gate: machine-load factor {load:.3f} from "
+              f"{n_controls} naive-reference control row"
+              f"{'s' if n_controls != 1 else ''} — new wall times are "
+              "divided by it before the threshold")
+    else:
+        print("bench-gate: no naive_us= control rows in both entries — "
+              "gating on raw wall time")
     status = 0
     for name, row in sorted(prev["rows"].items()):
         if name not in new["rows"]:
             print(f"  {name:24s} removed (was {row['us_per_call']:.1f}us)")
             continue
         old_us = float(row["us_per_call"])
-        new_us = float(new["rows"][name]["us_per_call"])
+        new_us = float(new["rows"][name]["us_per_call"]) / load
         rel = new_us / old_us - 1.0 if old_us else 0.0
         verdict = "OK"
         if rel > max_regress:

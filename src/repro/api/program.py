@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import functools
 import math
+import threading
 import warnings
 from collections import OrderedDict
 
@@ -69,10 +70,19 @@ _BUCKET = 64
 
 # =========================================================== ProgramCache ==
 class ProgramCache:
-    """Bounded LRU cache with hit/miss counters — the explicit replacement
-    for the module-global plan/launch dicts the executor used to hide
-    state in.  Eviction only drops memoization: handles already returned
-    stay valid.
+    """Bounded LRU cache with hit/miss/eviction counters — the explicit
+    replacement for the module-global plan/launch dicts the executor used
+    to hide state in.  Eviction only drops memoization: handles already
+    returned stay valid.
+
+    Thread-safe: the serving front door (``repro.serve``) dispatches from
+    an event loop plus worker threads, so get/put/LRU bookkeeping run
+    under a per-cache ``RLock``.  ``get_or_build`` holds the lock across
+    the build — two threads racing on the same missing key build ONCE and
+    observe the same value, instead of double-building and corrupting the
+    LRU order.  (Builds here are plan derivations and ``jax.jit`` wrapper
+    construction — cheap and non-reentrant on the same cache, so holding
+    the lock is safe; tracing happens at first *call*, outside the lock.)
 
         c = ProgramCache(maxsize=2, name="demo")
         c.get_or_build("k", lambda: 42)    # -> 42 (miss, built)
@@ -86,46 +96,61 @@ class ProgramCache:
         self.name = name
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+        self._lock = threading.RLock()
         self._d: OrderedDict = OrderedDict()
 
     def get(self, key, default=None):
-        try:
-            val = self._d[key]
-        except KeyError:
-            self.misses += 1
-            return default
-        self._d.move_to_end(key)
-        self.hits += 1
-        return val
+        with self._lock:
+            try:
+                val = self._d[key]
+            except KeyError:
+                self.misses += 1
+                return default
+            self._d.move_to_end(key)
+            self.hits += 1
+            return val
 
     def put(self, key, value) -> None:
-        self._d[key] = value
-        self._d.move_to_end(key)
-        while len(self._d) > self.maxsize:
-            self._d.popitem(last=False)
+        with self._lock:
+            self._d[key] = value
+            self._d.move_to_end(key)
+            while len(self._d) > self.maxsize:
+                self._d.popitem(last=False)
+                self.evictions += 1
 
     def get_or_build(self, key, build):
-        """Return the cached value, building (and caching) it on miss."""
+        """Return the cached value, building (and caching) it on miss —
+        atomically: concurrent callers of the same missing key get the
+        one built value."""
         sentinel = object()
-        val = self.get(key, sentinel)
-        if val is sentinel:
-            val = build()
-            self.put(key, val)
-        return val
+        with self._lock:
+            val = self.get(key, sentinel)
+            if val is sentinel:
+                val = build()
+                self.put(key, val)
+            return val
 
     def clear(self) -> None:
-        self._d.clear()
+        """Drop all memoization (counted as evictions — the retry path in
+        ``repro.serve`` reads the delta to classify eviction races)."""
+        with self._lock:
+            self.evictions += len(self._d)
+            self._d.clear()
 
     def stats(self) -> dict:
-        return {"name": self.name, "size": len(self._d),
-                "maxsize": self.maxsize, "hits": self.hits,
-                "misses": self.misses}
+        with self._lock:
+            return {"name": self.name, "size": len(self._d),
+                    "maxsize": self.maxsize, "hits": self.hits,
+                    "misses": self.misses, "evictions": self.evictions}
 
     def __len__(self) -> int:
-        return len(self._d)
+        with self._lock:
+            return len(self._d)
 
     def __contains__(self, key) -> bool:
-        return key in self._d
+        with self._lock:
+            return key in self._d
 
 
 PROGRAM_CACHE = ProgramCache(64, "programs")   # compile_stencil results

@@ -16,7 +16,7 @@ from repro.serve import serve_step as serve
 
 def run(arch: str, *, batch: int = 4, prompt_len: int = 32,
         max_new: int = 16, reduced: bool = True, n_data: int = 1,
-        n_model: int = 1, seed: int = 0):
+        n_model: int = 1, seed: int = 0, repeats: int = 3):
     cfg = C.get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -37,25 +37,38 @@ def run(arch: str, *, batch: int = 4, prompt_len: int = 32,
 
     prefill = jax.jit(serve.make_prefill(cfg, cache_len))
     decode = jax.jit(serve.make_decode_step(cfg), donate_argnums=(1,))
+    pos = prompt_len + (cfg.vlm_patches if cfg.family == "vlm" else 0)
     with mesh:
-        t0 = time.time()
+        # warmup dispatch: compile prefill AND a decode step outside the
+        # timed region — the first call pays jit, not the model
         tok, cache = prefill(params, prompt)
+        tok, cache = decode(params, cache, tok[:, None], jnp.int32(pos))
         tok.block_until_ready()
-        t_prefill = time.time() - t0
-        toks = [tok]
-        pos = prompt_len + (cfg.vlm_patches if cfg.family == "vlm" else 0)
-        t0 = time.time()
-        for i in range(max_new - 1):
-            tok, cache = decode(params, cache, tok[:, None],
-                                jnp.int32(pos + i))
-            toks.append(tok)
-        tok.block_until_ready()
-        t_decode = time.time() - t0
+
+        # min-of-N: shared-machine contamination is one-sided, so the
+        # fastest pass is the least-contaminated one (bench protocol,
+        # see benchmarks/common.time_fn).  Decode donates the cache, so
+        # every pass re-prefills to get a fresh one.
+        t_prefill = t_decode = float("inf")
+        for _ in range(max(1, repeats)):
+            t0 = time.perf_counter()
+            tok, cache = prefill(params, prompt)
+            tok.block_until_ready()
+            t_prefill = min(t_prefill, time.perf_counter() - t0)
+            toks = [tok]
+            t0 = time.perf_counter()
+            for i in range(max_new - 1):
+                tok, cache = decode(params, cache, tok[:, None],
+                                    jnp.int32(pos + i))
+                toks.append(tok)
+            tok.block_until_ready()
+            t_decode = min(t_decode, time.perf_counter() - t0)
     out = jnp.stack(toks, axis=1)
     print(f"[serve] {arch}: prefill {batch}x{prompt_len} in "
           f"{t_prefill*1e3:.1f}ms; {max_new-1} decode steps in "
           f"{t_decode*1e3:.1f}ms "
-          f"({(max_new-1)*batch/max(t_decode,1e-9):.1f} tok/s)", flush=True)
+          f"({(max_new-1)*batch/max(t_decode,1e-9):.1f} tok/s, "
+          f"best of {max(1, repeats)})", flush=True)
     return out
 
 

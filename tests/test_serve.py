@@ -1,0 +1,259 @@
+"""Service-path equivalence and robustness contracts (docs/serving.md).
+
+The load-bearing property: a request resolved through ANY service path —
+a full padded batch, a narrower ladder rung, or the degraded solo
+``.run`` bottom — returns the same field as calling
+``StencilProgram.run`` directly, within 2e-5, for 2-D and 3-D specs
+under every boundary family.  Everything else here pins the typed-error
+contract: admission, deadlines, poison isolation, and the cache
+counters the retry path leans on.
+"""
+from __future__ import annotations
+
+import threading
+
+import jax.numpy as jnp
+import pytest
+
+from repro.api.boundary import Boundary
+from repro.api.program import ProgramCache, compile_stencil
+from repro.core.stencil_spec import get
+from repro.serve.faults import FaultConfig, FaultInjector
+from repro.serve.stencil_service import (Expired, InvalidRequest,
+                                         PoisonedOutput, Rejected,
+                                         ServeRequest, ServiceConfig,
+                                         ServiceCore, SimClock,
+                                         StencilService)
+from repro.stencils.data import init_domain
+
+TOL = 2e-5
+
+CASES = [("j2d5pt", (12, 14)), ("j3d7pt", (6, 8, 5))]
+BOUNDARIES = [Boundary.dirichlet(0.0), Boundary.periodic(),
+              Boundary.reflect()]
+
+
+def _core(**over) -> ServiceCore:
+    cfg = dict(max_batch=4, batch_window_ms=1.0, max_queue=64,
+               max_inflight_per_tenant=64)
+    cfg.update(over)
+    return ServiceCore(ServiceConfig(**cfg), clock=SimClock())
+
+
+def _direct(spec, x, total_t, boundary=None):
+    prog = compile_stencil(spec, x.shape, t=None, boundary=boundary)
+    return prog.run(x, total_t)
+
+
+# ------------------------------------------------- equivalence property ----
+@pytest.mark.parametrize("name,shape", CASES)
+@pytest.mark.parametrize("boundary", BOUNDARIES,
+                         ids=[b.kind for b in BOUNDARIES])
+def test_batched_bucket_matches_direct_run(name, shape, boundary):
+    """3 requests through a width-4 bucket (so one row is PADDING) must
+    match the direct unbatched program exactly enough."""
+    spec = get(name)
+    core = _core()
+    xs = [init_domain(spec, shape, seed=i) for i in range(3)]
+    tks = [core.submit(ServeRequest(spec, x, total_t=4, boundary=boundary))
+           for x in xs]
+    core.drain()
+    assert core.counters["pad_rows"] >= 1
+    for x, tk in zip(xs, tks):
+        assert tk.ok, tk.error
+        want = _direct(spec, x, 4, boundary)
+        assert float(jnp.max(jnp.abs(tk.result() - want))) < TOL
+
+
+@pytest.mark.parametrize("name,shape", CASES)
+def test_degraded_ladder_matches_direct_run(name, shape):
+    """Under forced OOM above width 2 plus eviction races, every request
+    degrades through the ladder yet still matches the direct result."""
+    spec = get(name)
+    core = _core()
+    core.faults = FaultInjector(FaultConfig(seed=3, evict_rate=0.4,
+                                            oom_batch_limit=2))
+    xs = [init_domain(spec, shape, seed=10 + i) for i in range(6)]
+    tks = [core.submit(ServeRequest(spec, x, total_t=4)) for x in xs]
+    core.drain()
+    assert core.counters["ladder_splits"] >= 1
+    for x, tk in zip(xs, tks):
+        assert tk.ok, tk.error
+        want = _direct(spec, x, 4)
+        assert float(jnp.max(jnp.abs(tk.result() - want))) < TOL
+
+
+def test_unbatched_path_matches_direct_run():
+    """max_batch=1: the service bottoms out on ``.run`` and must still
+    agree with calling it directly."""
+    spec = get("j2d5pt")
+    core = _core(max_batch=1)
+    x = init_domain(spec, (10, 12), seed=0)
+    tk = core.submit(ServeRequest(spec, x, total_t=6))
+    core.drain()
+    assert tk.ok and tk.batched_width == 1
+    assert float(jnp.max(jnp.abs(tk.result() - _direct(spec, x, 6)))) < TOL
+
+
+# ------------------------------------------------------------- admission ----
+def test_queue_full_rejects_typed():
+    core = _core(max_queue=2)
+    spec = get("j2d5pt")
+    xs = [init_domain(spec, (8, 8), seed=i) for i in range(3)]
+    tks = [core.submit(ServeRequest(spec, x, total_t=2)) for x in xs]
+    assert tks[0].error is None and tks[1].error is None
+    assert isinstance(tks[2].error, Rejected)
+    assert tks[2].error.reason == "queue_full"
+    core.drain()
+
+
+def test_tenant_cap_rejects_typed():
+    core = _core(max_inflight_per_tenant=1)
+    spec = get("j2d5pt")
+    a = core.submit(ServeRequest(spec, init_domain(spec, (8, 8), seed=0),
+                                 total_t=2, tenant="alice"))
+    b = core.submit(ServeRequest(spec, init_domain(spec, (8, 8), seed=1),
+                                 total_t=2, tenant="alice"))
+    c = core.submit(ServeRequest(spec, init_domain(spec, (8, 8), seed=2),
+                                 total_t=2, tenant="bob"))
+    assert a.error is None and c.error is None
+    assert isinstance(b.error, Rejected) and b.error.reason == "tenant_cap"
+    core.drain()
+    assert a.ok and c.ok
+
+
+def test_oversized_and_invalid_resolve_alone():
+    """Validation happens BEFORE coalescing: a poison request can never
+    join a bucket."""
+    core = _core(max_cells=64)
+    spec = get("j2d5pt")
+    big = core.submit(ServeRequest(spec, jnp.zeros((16, 16)), total_t=2))
+    assert isinstance(big.error, Rejected) and big.error.reason == "oversized"
+    wrong_rank = core.submit(ServeRequest(spec, jnp.zeros((8,)), total_t=2))
+    assert isinstance(wrong_rank.error, InvalidRequest)
+    bad_t = core.submit(ServeRequest(
+        spec, jnp.zeros((8, 8)), total_t=-1))
+    assert isinstance(bad_t.error, InvalidRequest)
+    int_dtype = core.submit(ServeRequest(
+        spec, jnp.zeros((8, 8), jnp.int32), total_t=2))
+    assert isinstance(int_dtype.error, InvalidRequest)
+    assert core.pending() == 0          # nothing joined a bucket
+
+
+# ------------------------------------------------------------- deadlines ----
+def test_deadline_checked_at_every_stage():
+    spec = get("j2d5pt")
+    x = init_domain(spec, (8, 8), seed=0)
+
+    # admission: already expired never queues
+    core = _core()
+    tk = core.submit(ServeRequest(spec, x, total_t=2, deadline_ms=0.0))
+    assert isinstance(tk.error, Expired) and tk.error.stage == "admission"
+
+    # batch formation: expires while waiting for the window
+    core = _core(batch_window_ms=50.0)
+    tk = core.submit(ServeRequest(spec, x, total_t=2, deadline_ms=10.0))
+    live = core.submit(ServeRequest(spec, x, total_t=2))
+    core.clock.advance(30.0)
+    for b in core.poll(force=True):
+        core.dispatch(b)
+    core.drain()
+    assert isinstance(tk.error, Expired)
+    assert tk.error.stage == "batch_formation"
+    assert live.ok                      # the batch-mate still served
+
+    # post-dispatch: injected delay outlives the deadline
+    inj = FaultInjector(FaultConfig(seed=0, delay_ms_range=(40, 40)))
+    core = _core(batch_window_ms=0.0)
+    core.faults = inj
+    tk = core.submit(ServeRequest(spec, x, total_t=2, deadline_ms=20.0))
+    core.drain()
+    assert isinstance(tk.error, Expired)
+    assert tk.error.stage == "post_dispatch"
+
+
+# ------------------------------------------------------ poison isolation ----
+@pytest.mark.parametrize("guard,expect", [
+    ("reject", PoisonedOutput),
+    ("retry_solo", PoisonedOutput),     # solo re-run confirms input poison
+    ("propagate", None),
+])
+def test_nan_input_never_contaminates_batch_mates(guard, expect):
+    spec = get("j2d5pt")
+    core = _core(guard=guard, batch_window_ms=0.0)
+    healthy_x = init_domain(spec, (8, 8), seed=1)
+    poison_x = healthy_x.at[3, 3].set(jnp.nan)
+    poisoned = core.submit(ServeRequest(spec, poison_x, total_t=2))
+    healthy = core.submit(ServeRequest(spec, healthy_x, total_t=2))
+    core.drain()
+    if expect is None:
+        assert poisoned.ok
+        assert not bool(jnp.isfinite(poisoned.result()).all())
+    else:
+        assert isinstance(poisoned.error, expect)
+    assert healthy.ok
+    want = _direct(spec, healthy_x, 2)
+    assert float(jnp.max(jnp.abs(healthy.result() - want))) < TOL
+
+
+def test_result_raises_typed_error():
+    spec = get("j2d5pt")
+    core = _core(max_cells=16)
+    tk = core.submit(ServeRequest(spec, jnp.zeros((8, 8)), total_t=2))
+    with pytest.raises(Rejected):
+        tk.result()
+
+
+# --------------------------------------------------------- cache counters ----
+def test_program_cache_concurrent_get_or_build_builds_once():
+    cache = ProgramCache(8, name="t")
+    builds = []
+
+    def build():
+        builds.append(1)
+        return "v"
+
+    def worker():
+        assert cache.get_or_build("k", build) == "v"
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(builds) == 1
+    s = cache.stats()
+    assert s["misses"] == 1 and s["hits"] == 7 and s["evictions"] == 0
+
+
+def test_program_cache_eviction_counter():
+    cache = ProgramCache(2, name="t")
+    for i in range(4):
+        cache.put(i, i)
+    assert cache.stats()["evictions"] == 2
+    cache.clear()
+    assert cache.stats()["evictions"] == 4
+
+
+# ------------------------------------------------------------ async front ----
+def test_asyncio_front_door_round_trip():
+    import asyncio
+
+    spec = get("j2d5pt")
+    xs = [init_domain(spec, (8, 8), seed=i) for i in range(4)]
+
+    async def go():
+        svc = StencilService(ServiceConfig(max_batch=4,
+                                           batch_window_ms=1.0))
+        await svc.start()
+        try:
+            ys = await asyncio.gather(
+                *[svc.submit(ServeRequest(spec, x, total_t=2)) for x in xs])
+        finally:
+            await svc.stop()
+        return ys, svc.stats()
+
+    ys, stats = asyncio.run(go())
+    assert stats["completed"] == 4
+    for x, y in zip(xs, ys):
+        assert float(jnp.max(jnp.abs(y - _direct(spec, x, 2)))) < TOL
