@@ -1,0 +1,69 @@
+"""``resilient/`` bench family: what checkpointed legs cost over ``run``.
+
+A campaign (``run_resumable``) executes the identical sweep schedule as
+the plain ``run`` call — the overhead is per-leg: one fused health
+probe + host sync, one ``jax.device_get`` snapshot, and the async store
+write it overlaps with the next leg.  Rows time a full campaign against
+the uninterrupted ``run`` on the same program:
+
+    resilient/<spec>-T<T>-every<k>  us_per_call
+        derived: plain_us|overhead|legs=<n>|ckpts=<n>
+
+The tracked quantity is the *ratio* trend across PRs, not its absolute
+value: interpret-mode legs finish in microseconds, so the disk write
+dominates and the ratio is wildly pessimistic vs a real accelerator run
+(where a leg is seconds of compute against the same few-ms save).
+Raising ``every`` amortizes the per-leg cost — visible even here.
+CSV-only — this family is not persisted or gated.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+CASES = (
+    # name, shape, t, T, every
+    ("j2d5pt", (128, 256), 4, 32, 1),
+    ("j2d5pt", (128, 256), 4, 32, 2),
+    ("j3d7pt", (24, 32, 16), 2, 16, 2),
+)
+
+
+def rows():
+    from benchmarks.common import time_fn
+    from repro.api.program import compile_stencil
+    from repro.core.stencil_spec import get
+    from repro.resilient import CampaignStore
+    from repro.stencils.data import init_domain
+
+    out = []
+    for name, shape, t, total, every in CASES:
+        spec = get(name)
+        prog = compile_stencil(spec, shape, t=t, interpret=True)
+        x = init_domain(spec, shape)
+        plain_us = time_fn(lambda: prog.run(x, total).block_until_ready())
+        root = tempfile.mkdtemp(prefix="bench_resilient_")
+
+        def campaign():
+            shutil.rmtree(root, ignore_errors=True)
+            rep = prog.run_resumable(x, total, store=CampaignStore(root),
+                                     every=every, resume="never")
+            rep.result.block_until_ready()
+            return rep
+
+        rep = campaign()                      # warm caches + count legs
+        camp_us = time_fn(campaign)
+        shutil.rmtree(root, ignore_errors=True)
+        overhead = camp_us / plain_us - 1.0 if plain_us else 0.0
+        out.append((
+            f"resilient/{name}-T{total}-every{every}",
+            camp_us,
+            f"plain_us={plain_us:.1f}|overhead={overhead:+.1%}|"
+            f"legs={rep.legs_total}|ckpts={rep.checkpoints_written}"))
+    return out
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    print("name,us_per_call,derived")
+    emit(rows())

@@ -100,9 +100,10 @@ def main() -> None:
         ap.error("--passes must be >= 1 (an empty entry would vacuously "
                  "pass the bench gate)")
 
-    from benchmarks import (bench_kernels, bench_serve, bench_sharded,
-                            fig7_speedups, fig8_resources, fig9_breakdown,
-                            lm_roofline, table2_suite, table3_depths)
+    from benchmarks import (bench_kernels, bench_resilient, bench_serve,
+                            bench_sharded, fig7_speedups, fig8_resources,
+                            fig9_breakdown, lm_roofline, table2_suite,
+                            table3_depths)
     from benchmarks.common import emit
 
     modules = [
@@ -114,6 +115,7 @@ def main() -> None:
         ("kernels", bench_kernels),
         ("sharded", bench_sharded),
         ("serve", bench_serve),
+        ("resilient", bench_resilient),
         ("lm_roofline", lm_roofline),
     ]
     print("name,us_per_call,derived")

@@ -69,10 +69,19 @@ def gate(path: str, max_regress: float) -> int:
               f"in {os.path.basename(path)} — nothing to compare, OK")
         return 0
     prev, new = entries[-2], entries[-1]
-    print(f"bench-gate: {prev['rev']} ({prev['timestamp']}) -> "
-          f"{new['rev']} ({new['timestamp']}), "
+    print(f"bench-gate: {prev.get('rev', '?')} "
+          f"({prev.get('timestamp', '?')}) -> "
+          f"{new.get('rev', '?')} ({new.get('timestamp', '?')}), "
           f"max regression {max_regress:.0%}")
-    load, n_controls = load_factor(prev["rows"], new["rows"])
+    prev_rows, new_rows = prev.get("rows"), new.get("rows")
+    if not isinstance(prev_rows, dict) or not isinstance(new_rows, dict):
+        # a hand-edited or truncated baseline entry: warn, don't crash —
+        # an advisory gate that dies on its own input is worse than no gate
+        print("bench-gate: WARNING — entry without a 'rows' table "
+              f"({'previous' if not isinstance(prev_rows, dict) else 'new'}); "
+              "nothing to compare, OK")
+        return 0
+    load, n_controls = load_factor(prev_rows, new_rows)
     if n_controls:
         print(f"bench-gate: machine-load factor {load:.3f} from "
               f"{n_controls} naive-reference control row"
@@ -82,12 +91,21 @@ def gate(path: str, max_regress: float) -> int:
         print("bench-gate: no naive_us= control rows in both entries — "
               "gating on raw wall time")
     status = 0
-    for name, row in sorted(prev["rows"].items()):
-        if name not in new["rows"]:
-            print(f"  {name:24s} removed (was {row['us_per_call']:.1f}us)")
+    for name, row in sorted(prev_rows.items()):
+        if name not in new_rows:
+            was = row.get("us_per_call")
+            print(f"  {name:24s} removed"
+                  + (f" (was {float(was):.1f}us)" if was is not None else ""))
             continue
-        old_us = float(row["us_per_call"])
-        new_us = float(new["rows"][name]["us_per_call"]) / load
+        old_us, new_raw = (row.get("us_per_call"),
+                           new_rows[name].get("us_per_call"))
+        if old_us is None or new_raw is None:
+            print(f"  {name:24s} WARNING — row missing us_per_call in "
+                  f"{'baseline' if old_us is None else 'new'} entry; "
+                  "skipped")
+            continue
+        old_us = float(old_us)
+        new_us = float(new_raw) / load
         rel = new_us / old_us - 1.0 if old_us else 0.0
         verdict = "OK"
         if rel > max_regress:
@@ -95,9 +113,10 @@ def gate(path: str, max_regress: float) -> int:
             status = 1
         print(f"  {name:24s} {old_us:9.1f}us -> {new_us:9.1f}us "
               f"({rel:+.1%})  {verdict}")
-    for name in sorted(set(new["rows"]) - set(prev["rows"])):
-        print(f"  {name:24s} new row "
-              f"({float(new['rows'][name]['us_per_call']):.1f}us)")
+    for name in sorted(set(new_rows) - set(prev_rows)):
+        us = new_rows[name].get("us_per_call")
+        print(f"  {name:24s} new row"
+              + (f" ({float(us):.1f}us)" if us is not None else ""))
     print("bench-gate: " + ("FAIL — wall-time regression beyond threshold"
                             if status else "OK"))
     return status

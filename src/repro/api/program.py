@@ -729,7 +729,64 @@ class StencilProgram:
                          if self.plan else None),
             interpret=self.interpret)
 
+    # ----------------------------------------------- resumable campaigns ----
+    def run_resumable(self, x, total_t: int, *, store, every: int = 1,
+                      **kwargs):
+        """``total_t`` steps as checkpointed legs of ``every`` temporal
+        blocks, resumable after a crash and **bit-exact** equal to
+        :meth:`run` (guide: ``docs/resilience.md``).
+
+            store = CampaignStore("/ckpt/heat2d")
+            y = prog.run_resumable(x, 512, store=store, every=2)
+            # ... SIGKILL mid-campaign ...
+            y = prog.run_resumable(x, 512, store=store)   # picks up
+
+        Keyword knobs (``policy=``, ``health=``, ``faults=``, ``clock=``,
+        ``resume=``, ``on_leg=``) pass through to
+        :func:`repro.resilient.runner.run_campaign`; returns its
+        :class:`~repro.resilient.runner.CampaignReport` (the final field
+        is ``report.result``).
+        """
+        from repro.resilient import runner
+        return runner.run_campaign(self, x, total_t, store=store,
+                                   every=every, sharded=False, **kwargs)
+
+    def run_sharded_resumable(self, x, total_t: int, *, store,
+                              every: int = 1, **kwargs):
+        """The sharded twin of :meth:`run_resumable`: checkpointed legs
+        of :meth:`run_sharded` over the program's mesh, plus elastic
+        restore onto a smaller mesh when a device drops (the default
+        ``RetryPolicy(elastic=True)``)."""
+        if self.mesh is None:
+            raise ValueError(
+                "run_sharded_resumable needs a mesh-compiled program: "
+                "compile_stencil(spec, shape, mesh=(2, 4)) — "
+                "see docs/sharding.md")
+        from repro.resilient import runner
+        return runner.run_campaign(self, x, total_t, store=store,
+                                   every=every, sharded=True, **kwargs)
+
     # ---------------------------------------------------- introspection ----
+    def fingerprint(self) -> dict:
+        """A JSON-safe identity card for checkpoint manifests: what a
+        resumed campaign must match bit-for-bit (spec signature, shape,
+        dtypes, boundary, depth, mode, hw) plus what may drift only
+        elastically (mesh, plan) — see ``repro.resilient.store``."""
+        return {
+            "spec_name": self.spec.name,
+            "spec_signature": repr(self.spec.signature),
+            "shape": list(self.shape),
+            "dtype": self.dtype.name,
+            "compute_dtype": self.compute_dtype.name,
+            "boundary": repr(self.boundary),
+            "t": int(self.t),
+            "mode": self.mode,
+            "hw": self.hw.name,
+            "plan": repr(_plan_key(self.plan)),
+            "mesh": (None if self.mesh is None
+                     else {k: int(v) for k, v in self.mesh.shape.items()}),
+        }
+
     def compute_shape(self, t: int | None = None) -> tuple[int, ...]:
         """The domain the kernels actually compute: the program shape,
         ghost-extended by ``t·rad`` per side for re-pinning boundaries."""

@@ -35,7 +35,7 @@ Execution of one temporal block of depth ``d`` (DESIGN.md §12):
 The per-shard compute is the jnp tap-engine chain (the same numerical
 core the Pallas kernels and the oracle share, DESIGN.md §8.3); driving
 the Pallas kernels *inside* shard_map needs a per-shard scalar-prefetch
-origin operand and stays a recorded stretch item (DESIGN.md §14).
+origin operand and stays a recorded stretch item (DESIGN.md §15).
 
 Everything here is importable without initializing a JAX backend; device
 questions are answered when ``compile_stencil(..., mesh=)`` resolves the

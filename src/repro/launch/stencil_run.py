@@ -163,6 +163,76 @@ def run_sharded(spec: StencilSpec | str, mesh_shape: tuple[int, ...], *,
     return y
 
 
+def run_campaign_cli(spec: StencilSpec | str, *, checkpoint_dir: str,
+                     mesh_shape: tuple[int, ...] | None = None,
+                     t: int | None = None, scale: int = 64,
+                     boundary: Boundary | None = None,
+                     total_t: int | None = None, every: int = 1,
+                     resume: str = "auto", kill_after_leg: int | None = None,
+                     out: str | None = None):
+    """Drive a checkpointed campaign (``docs/resilience.md``): ``T`` steps
+    as legs of ``every`` temporal blocks, checkpointing into
+    ``checkpoint_dir``, resumable after a crash and bit-exact equal to
+    the uninterrupted run.  ``kill_after_leg`` SIGKILLs the process after
+    that leg's checkpoint lands — the CI crash-restart smoke:
+
+        python -m repro.launch.stencil_run --stencil j2d5pt \\
+            --checkpoint-dir /tmp/ck --T 24 --kill-after-leg 2   # dies (137)
+        python -m repro.launch.stencil_run --stencil j2d5pt \\
+            --checkpoint-dir /tmp/ck --T 24 --resume auto --out y.npy
+    """
+    import numpy as np
+
+    from repro.resilient import CampaignStore
+
+    spec = get(spec) if isinstance(spec, str) else spec
+    boundary = boundary or Boundary.dirichlet(0.0)
+    if mesh_shape:
+        shape = list(reduced_domain(spec, scale))
+        for d, n in enumerate(mesh_shape):
+            min_shard = (t or 2) * spec.radius + 1
+            shape[d] = n * max(-(-shape[d] // n), min_shard)
+        shape = tuple(shape)
+        prog = compile_stencil(spec, shape, t=t or 2, boundary=boundary,
+                               mesh=mesh_shape, interpret=True)
+    else:
+        shape = reduced_domain(spec, scale)
+        prog = compile_stencil(spec, shape, t=t, boundary=boundary,
+                               interpret=True)
+    total = total_t if total_t is not None else 2 * prog.t + 1
+    x = init_domain(spec, shape)
+    store = CampaignStore(checkpoint_dir)
+    on_leg = None
+    if kill_after_leg is not None:
+        import os
+        import signal
+
+        def on_leg(leg, steps_done):
+            if leg >= kill_after_leg:
+                store.wait()     # the landed checkpoint survives the kill
+                print(f"[campaign] injected crash after leg {leg} "
+                      f"({steps_done}/{total} steps)", flush=True)
+                os.kill(os.getpid(), signal.SIGKILL)
+
+    t0 = time.time()
+    runner = (prog.run_sharded_resumable if mesh_shape
+              else prog.run_resumable)
+    rep = runner(x, total, store=store, every=every, resume=resume,
+                 on_leg=on_leg)
+    rep.result.block_until_ready()
+    dt = time.time() - t0
+    resumed = (f" resumed@leg{rep.resumed_from}"
+               if rep.resumed_from is not None else "")
+    print(f"[campaign] {spec.name:11s} domain={shape} T={total} "
+          f"t={prog.t} legs={rep.legs_total} every={every}"
+          f"{resumed} ckpts={rep.checkpoints_written} "
+          f"rms={rep.final_rms:.4g} {dt*1e3:.0f}ms", flush=True)
+    if out:
+        np.save(out, np.asarray(rep.result))
+        print(f"[campaign] final field -> {out}", flush=True)
+    return rep
+
+
 def run_distributed(name: str, *, t_total: int = 4, t_block: int = 2,
                     scale: int = 64):
     # lazy: the mesh helpers need jax.sharding.AxisType (newer jax); the
@@ -238,14 +308,34 @@ def main():
                     help="device mesh for run_sharded (axis k shards dim k);"
                          " CPU hosts fake the device count automatically")
     ap.add_argument("--T", type=int, default=None, dest="total_t",
-                    help="total steps for --mesh runs (default 2*t+1)")
+                    help="total steps for --mesh/--checkpoint-dir runs "
+                         "(default 2*t+1)")
     ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="run as a checkpointed resumable campaign into DIR"
+                         " (docs/resilience.md)")
+    ap.add_argument("--resume", default="auto",
+                    choices=("auto", "never", "always"),
+                    help="campaign resume mode (default auto: pick up the "
+                         "newest good checkpoint in --checkpoint-dir)")
+    ap.add_argument("--every", type=int, default=1, metavar="N",
+                    help="temporal blocks per campaign leg (default 1)")
+    ap.add_argument("--kill-after-leg", type=int, default=None, metavar="K",
+                    help="SIGKILL the process after leg K's checkpoint "
+                         "lands (crash-restart testing)")
+    ap.add_argument("--out", default=None, metavar="FILE",
+                    help="np.save the final field to FILE")
     args = ap.parse_args()
     if args.taps and args.spec_json:
         ap.error("--taps and --spec-json are mutually exclusive")
     if args.mesh and args.distributed:
         ap.error("--mesh (run_sharded) and --distributed (jnp reference "
                  "scheme) are mutually exclusive")
+    if args.checkpoint_dir and args.distributed:
+        ap.error("--checkpoint-dir (resumable campaigns) drives compiled "
+                 "programs; --distributed is the jnp reference scheme")
+    if args.kill_after_leg is not None and not args.checkpoint_dir:
+        ap.error("--kill-after-leg needs --checkpoint-dir")
     if args.mesh:
         # must happen before the backend initializes (main() is the first
         # device use); no-op when a device-count flag is already set, and
@@ -261,7 +351,14 @@ def main():
         spec = (define_stencil(parse_taps(args.taps),
                                normalize=args.normalize, name=args.name)
                 if args.taps else spec_from_json(args.spec_json))
-        if args.mesh:
+        if args.checkpoint_dir:
+            run_campaign_cli(
+                spec, checkpoint_dir=args.checkpoint_dir,
+                mesh_shape=args.mesh, t=args.t, scale=args.scale,
+                boundary=args.boundary, total_t=args.total_t,
+                every=args.every, resume=args.resume,
+                kill_after_leg=args.kill_after_leg, out=args.out)
+        elif args.mesh:
             print(cost_summary_line(spec), flush=True)
             run_sharded(spec, args.mesh, t=args.t, scale=args.scale,
                         boundary=args.boundary, total_t=args.total_t)
@@ -271,7 +368,13 @@ def main():
         return
     names = list(TABLE2) if args.stencil == "all" else args.stencil.split(",")
     for n in names:
-        if args.mesh:
+        if args.checkpoint_dir:
+            run_campaign_cli(
+                n, checkpoint_dir=args.checkpoint_dir, mesh_shape=args.mesh,
+                t=args.t, scale=args.scale, boundary=args.boundary,
+                total_t=args.total_t, every=args.every, resume=args.resume,
+                kill_after_leg=args.kill_after_leg, out=args.out)
+        elif args.mesh:
             run_sharded(n, args.mesh, t=args.t, scale=args.scale,
                         boundary=args.boundary, total_t=args.total_t)
         elif args.distributed:

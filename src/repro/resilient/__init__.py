@@ -1,0 +1,64 @@
+"""Crash-safe resumable stencil campaigns (guide: ``docs/resilience.md``).
+
+The paper's EBISU regime is deep temporal blocking over *long* time
+loops — exactly the runs that die to preemption, OOM, or numerical
+blow-up in production.  ``StencilProgram.run``/``run_sharded`` are
+all-or-nothing; this package runs the same ``T`` steps as
+temporal-block-aligned **legs** with checkpointing, health monitoring,
+and bounded recovery, and a resumed campaign is **bit-exact** equal to
+the uninterrupted run (DESIGN.md §14):
+
+    from repro.resilient import CampaignStore, HealthEnvelope
+    store = CampaignStore("/ckpt/heat3d")
+    y = prog.run_resumable(x, 512, store=store, every=2)   # leg = 2 blocks
+    # ... SIGKILL / preemption / power loss ...
+    y = prog.run_resumable(x, 512, store=store)            # resumes, bit-exact
+
+Pieces:
+
+  * :class:`~repro.resilient.store.CampaignStore` — atomic
+    (tmp-dir + rename) checkpoints with async host-side serialization,
+    a fingerprint manifest, and a content checksum; corrupt payloads are
+    refused at load (:class:`~repro.resilient.store.CorruptCheckpoint`)
+    and fingerprint drift at resume is refused with the fixes spelled
+    out (:class:`~repro.resilient.store.ResumeMismatch`).
+  * :mod:`~repro.resilient.health` — ONE fused NaN/Inf + norm reduction
+    per leg, judged against a configurable
+    :class:`~repro.resilient.health.HealthEnvelope`.
+  * :mod:`~repro.resilient.policy` — bounded retry/backoff
+    (:class:`~repro.resilient.policy.RetryPolicy`), transient/permanent
+    fault classification, and the typed
+    :class:`~repro.resilient.policy.CampaignFault` bottom rung — every
+    rung bounded, no path hangs (the ``repro.serve`` ladder contract,
+    applied to campaigns).
+  * :mod:`~repro.resilient.runner` — the leg loop:
+    :func:`~repro.resilient.runner.run_campaign` /
+    :func:`~repro.resilient.runner.resume_campaign`, with rollback to
+    the last good checkpoint and elastic restore onto a smaller mesh
+    when a device drops from a sharded campaign.
+
+Fault injection for all of it lives in :mod:`repro.faults` (shared with
+the serving front door), seeded and deterministic.
+"""
+from repro.resilient.health import HealthEnvelope, HealthViolation
+from repro.resilient.policy import CampaignFault, RetryPolicy, classify
+from repro.resilient.runner import (CampaignReport, leg_schedule,
+                                    resume_campaign, run_campaign)
+from repro.resilient.store import (CampaignStore, CheckpointError,
+                                   CorruptCheckpoint, ResumeMismatch)
+
+__all__ = [
+    "CampaignFault",
+    "CampaignReport",
+    "CampaignStore",
+    "CheckpointError",
+    "CorruptCheckpoint",
+    "HealthEnvelope",
+    "HealthViolation",
+    "ResumeMismatch",
+    "RetryPolicy",
+    "classify",
+    "leg_schedule",
+    "resume_campaign",
+    "run_campaign",
+]

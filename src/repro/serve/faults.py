@@ -1,162 +1,24 @@
-"""Seeded fault injection for the stencil serving front door.
+"""Import shim: the fault injector moved to :mod:`repro.faults`.
 
-A service that only ever sees healthy traffic is untested by
-construction, so the request path is validated the other way around:
-:class:`FaultInjector` drives every failure mode the service defends
-against, from one seeded RNG, with **no wall-clock or unseeded
-randomness in results** — the same ``FaultConfig`` always produces the
-same fault sequence, so the soak test (``tests/test_serve_soak.py``) is
-a deterministic regression test, not a flake generator.
-
-Two kinds of faults:
-
-  * **dispatch faults** the service core consults at its hook points —
-    transient errors (:class:`TransientFault` with ``kind='evicted'`` /
-    ``'oom'``) that the retry/backoff + degradation ladder must absorb,
-    plus injected dispatch delays that push in-flight requests past
-    their deadlines.  ``evicted`` really clears the runner cache before
-    raising, so the retry exercises the true rebuild path, not a
-    simulation of it.
-  * **traffic faults** a driver weaves into synthetic load —
-    NaN-poisoned inputs, oversized shapes, already-expired deadlines —
-    via :meth:`FaultInjector.classify_request`.  These are *requests*,
-    not errors: the service must resolve each to a typed error while its
-    healthy batch-mates get correct results.
-
-Usage (the CLI driver and the soak test are the two real call sites):
-
-    inj = FaultInjector(FaultConfig(seed=7, evict_rate=0.1,
-                                    oom_batch_limit=4))
-    core = ServiceCore(config, clock=SimClock(), faults=inj)
-
-This module is backend-free: importing it never touches JAX.
+PR 7 generalized the serving-only injector into one shared by the
+serving front door AND the resumable campaign runner
+(``repro.resilient``) — same seeded determinism contract, plus the
+campaign fault kinds (NaN-at-leg, corrupt-checkpoint-on-disk,
+crash-mid-save, device loss).  Import from ``repro.faults`` going
+forward; this module keeps the old names resolving (shim policy in
+README.md).
 """
-from __future__ import annotations
+from repro.faults import (CAMPAIGN_KINDS, HEALTHY,  # noqa: F401
+                          TRAFFIC_KINDS, FaultConfig, FaultInjector,
+                          MonotonicClock, SimClock, TransientFault)
 
-import dataclasses
-import random
-
-
-class TransientFault(RuntimeError):
-    """An injected failure the retry/degradation ladder should absorb.
-
-    ``kind`` ∈ {'evicted', 'oom'}: a program/runner-cache eviction race
-    (retryable at the same batch width — the rebuild succeeds) or a
-    simulated device OOM on an over-wide batch (retry at the same width
-    keeps failing; the ladder must *narrow* the batch instead).
-    """
-
-    def __init__(self, kind: str, detail: str = ""):
-        super().__init__(f"injected {kind}" + (f": {detail}" if detail else ""))
-        self.kind = kind
-
-
-@dataclasses.dataclass(frozen=True)
-class FaultConfig:
-    """Knobs for :class:`FaultInjector` — all rates are per-event
-    probabilities drawn from one RNG seeded with ``seed``.
-
-    Dispatch-side:
-      * ``evict_rate`` — before a dispatch, clear ``RUNNER_CACHE`` and
-        raise ``TransientFault('evicted')`` once (retry rebuilds).
-      * ``oom_batch_limit`` — dispatches wider than this many requests
-        raise ``TransientFault('oom')`` *deterministically* (0 disables);
-        the ladder must degrade to narrower batches or solo runs.
-      * ``delay_ms_range`` — (lo, hi) extra milliseconds a dispatch takes
-        (advanced on the service clock), so deadlines can expire while a
-        request is in flight.
-      * ``nan_output_rate`` — corrupt one output row of a healthy batch
-        after compute (tests the guard's batch-mate isolation without a
-        poisoned input).
-
-    Traffic-side (consumed by drivers via :meth:`classify_request`):
-      * ``nan_input_rate`` — request field arrives NaN-poisoned.
-      * ``oversized_rate`` — request shape exceeds the admission cap.
-      * ``expired_rate`` — request arrives with an already-spent deadline.
-    """
-
-    seed: int = 0
-    evict_rate: float = 0.0
-    oom_batch_limit: int = 0
-    delay_ms_range: tuple = (0, 0)
-    nan_output_rate: float = 0.0
-    nan_input_rate: float = 0.0
-    oversized_rate: float = 0.0
-    expired_rate: float = 0.0
-
-
-HEALTHY = "healthy"
-TRAFFIC_KINDS = ("nan_input", "oversized", "expired")
-
-
-class FaultInjector:
-    """The seeded fault source; one instance per service/soak run.
-
-        inj = FaultInjector(FaultConfig(seed=3, evict_rate=0.5))
-        inj.should_evict(), inj.should_evict()   # deterministic sequence
-    """
-
-    def __init__(self, config: FaultConfig | None = None):
-        self.config = config or FaultConfig()
-        self._rng = random.Random(self.config.seed)
-        self.injected: dict = {"evicted": 0, "oom": 0, "delay_ms": 0,
-                               "nan_output": 0, "nan_input": 0,
-                               "oversized": 0, "expired": 0}
-
-    # ------------------------------------------------- dispatch hooks ----
-    def should_evict(self) -> bool:
-        """Roll the eviction-race die (counted when it comes up)."""
-        hit = self._rng.random() < self.config.evict_rate
-        if hit:
-            self.injected["evicted"] += 1
-        return hit
-
-    def should_oom(self, batch_width: int) -> bool:
-        """True when ``batch_width`` exceeds the configured OOM limit —
-        deterministic, so retries at the same width keep failing and the
-        ladder is forced to narrow."""
-        limit = self.config.oom_batch_limit
-        hit = bool(limit) and batch_width > limit
-        if hit:
-            self.injected["oom"] += 1
-        return hit
-
-    def dispatch_delay_ms(self) -> float:
-        """Extra service time for this dispatch, in ms (0 when disabled)."""
-        lo, hi = self.config.delay_ms_range
-        if hi <= 0:
-            return 0.0
-        d = self._rng.uniform(lo, hi)
-        self.injected["delay_ms"] += d
-        return d
-
-    def corrupt_output_row(self, batch_width: int) -> int | None:
-        """Index of a batch row to NaN-poison post-compute, or None."""
-        if self._rng.random() < self.config.nan_output_rate:
-            self.injected["nan_output"] += 1
-            return self._rng.randrange(batch_width)
-        return None
-
-    # -------------------------------------------------- traffic hooks ----
-    def classify_request(self) -> str:
-        """Draw the kind of the next synthetic request: ``'healthy'`` or
-        one of ``TRAFFIC_KINDS`` — drivers shape the request to match."""
-        r = self._rng.random()
-        cfg = self.config
-        edges = (("nan_input", cfg.nan_input_rate),
-                 ("oversized", cfg.oversized_rate),
-                 ("expired", cfg.expired_rate))
-        acc = 0.0
-        for kind, rate in edges:
-            acc += rate
-            if r < acc:
-                self.injected[kind] += 1
-                return kind
-        return HEALTHY
-
-    def stats(self) -> dict:
-        """Counters of everything injected so far (reported by drivers so
-        a soak's fault mix is visible next to its outcome mix)."""
-        out = dict(self.injected)
-        out["delay_ms"] = round(out["delay_ms"], 3)
-        return out
+__all__ = [
+    "CAMPAIGN_KINDS",
+    "FaultConfig",
+    "FaultInjector",
+    "HEALTHY",
+    "MonotonicClock",
+    "SimClock",
+    "TRAFFIC_KINDS",
+    "TransientFault",
+]

@@ -81,7 +81,6 @@ import itertools
 import math
 import random
 import threading
-import time
 from collections import Counter
 
 import jax.numpy as jnp
@@ -89,7 +88,8 @@ import jax.numpy as jnp
 from repro.api.boundary import ZERO, Boundary
 from repro.api.program import RUNNER_CACHE, compile_stencil
 from repro.core.stencil_spec import StencilSpec
-from repro.serve.faults import FaultInjector, TransientFault
+from repro.faults import (FaultInjector, MonotonicClock, SimClock,
+                          TransientFault)
 
 GUARDS = ("reject", "propagate", "retry_solo")
 
@@ -140,34 +140,6 @@ class PoisonedOutput(ServeError):
 class ServiceFault(ServeError):
     """Dispatch failed after the whole retry/degradation ladder — the
     typed bottom rung, in place of a hang or a raw traceback."""
-
-
-# ================================================================== clocks ==
-class SimClock:
-    """Manually-advanced milliseconds — the deterministic soak clock.
-    Backoff sleeps and injected delays advance it; nothing else does."""
-
-    def __init__(self, start_ms: float = 0.0):
-        self._now = float(start_ms)
-
-    def now_ms(self) -> float:
-        return self._now
-
-    def advance(self, ms: float) -> None:
-        if ms > 0:
-            self._now += ms
-
-
-class MonotonicClock:
-    """Real serving clock: ``time.monotonic``; ``advance`` really sleeps
-    (backoff must let the transient condition clear)."""
-
-    def now_ms(self) -> float:
-        return time.monotonic() * 1e3
-
-    def advance(self, ms: float) -> None:
-        if ms > 0:
-            time.sleep(ms / 1e3)
 
 
 # ================================================================= request ==
@@ -392,27 +364,57 @@ class ServiceCore:
         return key, prog
 
     # -------------------------------------------------------- coalescing ----
+    @staticmethod
+    def _round_robin(tickets: list) -> list:
+        """Batch-formation order: tenants interleaved round-robin
+        (first-appearance tenant order, oldest-first within a tenant),
+        so a burst from one tenant cannot push every other tenant's
+        requests out of the next ``max_batch`` slots — under contention
+        each waiting tenant lands at least one request per formed batch.
+        Deterministic: arrival order decides both orderings.  With a
+        single tenant this is exactly the old FIFO."""
+        by_tenant: dict = {}
+        for tk in tickets:
+            by_tenant.setdefault(tk.request.tenant, []).append(tk)
+        if len(by_tenant) <= 1:
+            return list(tickets)
+        out, queues = [], list(by_tenant.values())
+        while queues:
+            still = []
+            for q in queues:
+                out.append(q.pop(0))
+                if q:
+                    still.append(q)
+            queues = still
+        return out
+
     def poll(self, force: bool = False) -> list:
         """Form due batches: a bucket dispatches when full
         (``max_batch``) or its oldest request has waited out the batch
-        window (or ``force``, at drain).  Expired requests are resolved
-        ``Expired('batch_formation')`` here — dropped from the batch
-        instead of dispatched."""
+        window (or ``force``, at drain).  Batch slots are filled in
+        per-tenant round-robin order (:meth:`_round_robin`), so no
+        tenant starves behind another tenant's burst.  Expired requests
+        are resolved ``Expired('batch_formation')`` here — dropped from
+        the batch instead of dispatched."""
         now = self.clock.now_ms()
         cfg = self.config
 
         def due(tickets) -> bool:
             return bool(tickets) and (
                 force or len(tickets) >= cfg.max_batch
-                or now - tickets[0].admitted_ms >= cfg.batch_window_ms)
+                or now - min(tk.admitted_ms for tk in tickets)
+                >= cfg.batch_window_ms)
 
         batches, expired = [], []
         with self._lock:
             for key, tickets in self._buckets.items():
                 prog, total_t = self._programs[key]
                 while due(tickets):
-                    taken, tickets[:] = (tickets[:cfg.max_batch],
-                                         tickets[cfg.max_batch:])
+                    ordered = self._round_robin(tickets)
+                    taken, tickets[:] = (ordered[:cfg.max_batch],
+                                         ordered[cfg.max_batch:])
+                    if len({tk.request.tenant for tk in taken}) > 1:
+                        self.counters["multi_tenant_batches"] += 1
                     live = []
                     for tk in taken:
                         (expired if tk.expired(now) else live).append(tk)

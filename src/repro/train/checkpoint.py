@@ -67,22 +67,47 @@ def save(ckpt_dir: str, step: int, tree, *, block: bool = False):
     return t
 
 
+def _readable_manifest(path: str) -> bool:
+    """True when ``path`` parses as a checkpoint manifest — a truncated or
+    garbage ``manifest.json`` (half-written before power loss, bit-rotted
+    on disk) must make its checkpoint invisible, not crash the resume."""
+    try:
+        with open(path) as f:
+            m = json.load(f)
+        return isinstance(m, dict) and "leaves" in m
+    except (OSError, ValueError):
+        return False
+
+
 def latest_step(ckpt_dir: str) -> int | None:
     if not os.path.isdir(ckpt_dir):
         return None
     steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
              if d.startswith("step_") and ".tmp" not in d
-             and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json"))]
+             and _readable_manifest(os.path.join(ckpt_dir, d,
+                                                 "manifest.json"))]
     return max(steps) if steps else None
 
 
 def restore(ckpt_dir: str, step: int, like_tree, shardings=None):
     """Load ``step`` into the structure of ``like_tree``; if ``shardings``
     (a matching tree of NamedSharding) is given, device_put each leaf with
-    it — this is the elastic-reshard path (new mesh, same logical specs)."""
+    it — this is the elastic-reshard path (new mesh, same logical specs).
+    A corrupt or unreadable manifest raises ``ValueError`` (resume via
+    ``latest_step`` never selects one)."""
     d = os.path.join(ckpt_dir, f"step_{step}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        raise ValueError(
+            f"checkpoint step_{step} has no readable manifest ({e}); "
+            "it is corrupt or was never finalized — pick a step from "
+            "latest_step(), which skips such checkpoints") from e
+    if not isinstance(manifest, dict) or "leaves" not in manifest:
+        raise ValueError(
+            f"checkpoint step_{step} manifest is not a leaves table; "
+            "the checkpoint is corrupt")
     keyed, treedef = _flatten(like_tree)
     leaves = []
     shard_flat = (jax.tree.leaves(shardings) if shardings is not None

@@ -1,0 +1,103 @@
+"""Child process: sharded resumable campaigns on 8 faked CPU devices.
+
+Run by ``tests/test_resilient.py::test_sharded_campaigns_on_faked_mesh``
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.  Asserts:
+
+  * a sharded campaign (crash + resume) is bit-exact vs ``run_sharded``;
+  * a device loss mid-campaign restores elastically onto a smaller mesh
+    and completes (numerically close — replanning per the bigger shard
+    may legitimately reassociate, so bitwise equality is not claimed);
+  * losses past a 1-device mesh resolve to ``CampaignFault('mesh_
+    exhausted')``;
+  * an elastic resume (checkpoint mesh != live mesh) is allowed under
+    ``RetryPolicy(elastic=True)`` and refused under strict.
+"""
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.boundary import Boundary
+from repro.api.program import compile_stencil
+from repro.core.stencil_spec import get
+from repro.faults import FaultConfig, FaultInjector, SimClock
+from repro.resilient import (CampaignFault, CampaignStore, ResumeMismatch,
+                             RetryPolicy, resume_campaign)
+
+SPEC = get("j2d5pt")
+SHAPE = (64, 96)
+T = 22
+
+
+class Crash(Exception):
+    pass
+
+
+def main():
+    prog = compile_stencil(SPEC, SHAPE, t=4, mesh=(2, 2))
+    x = jnp.asarray(
+        np.random.default_rng(0).standard_normal(SHAPE), jnp.float32)
+    ref = np.asarray(prog.run_sharded(x.copy(), T))
+
+    # 1. crash after leg 2, resume: bit-exact vs uninterrupted run_sharded
+    store = CampaignStore(tempfile.mkdtemp())
+
+    def killer(leg, steps_done):
+        if leg == 2:
+            store.wait()
+            raise Crash()
+
+    try:
+        prog.run_sharded_resumable(x, T, store=store, on_leg=killer)
+        raise SystemExit("crash hook never fired")
+    except Crash:
+        pass
+    rep = resume_campaign(prog, store, sharded=True)
+    assert rep.resumed_from == 2, rep.resumed_from
+    assert (np.asarray(rep.result) == ref).all(), "sharded resume not bit-exact"
+    print("sharded-resume: bit-exact OK")
+
+    # 2. device loss at leg 3: elastic restore onto a smaller mesh
+    inj = FaultInjector(FaultConfig(device_loss_at_leg=(3,)))
+    rep = prog.run_sharded_resumable(
+        x, T, store=CampaignStore(tempfile.mkdtemp()), faults=inj,
+        clock=SimClock())
+    assert rep.mesh_history == [(2, 1)], rep.mesh_history
+    assert np.allclose(np.asarray(rep.result), ref, atol=1e-5)
+    print("elastic-restore: mesh (2,2)->(2,1) OK")
+
+    # 3. repeated losses bottom out in a typed fault, never a hang
+    inj = FaultInjector(FaultConfig(device_loss_at_leg=(1, 2, 3)))
+    try:
+        prog.run_sharded_resumable(
+            x, T, store=CampaignStore(tempfile.mkdtemp()), faults=inj,
+            clock=SimClock())
+        raise SystemExit("triple device loss did not fault")
+    except CampaignFault as e:
+        assert e.reason == "mesh_exhausted", e.reason
+    print("mesh-exhausted: typed fault OK")
+
+    # 4. elastic resume across a mesh change; strict resume refuses it
+    store = CampaignStore(tempfile.mkdtemp())
+    try:
+        prog.run_sharded_resumable(x, T, store=store, on_leg=killer)
+    except Crash:
+        pass
+    smaller = compile_stencil(SPEC, SHAPE, t=4, mesh=(2, 1))
+    try:
+        resume_campaign(smaller, store, sharded=True,
+                        policy=RetryPolicy(elastic=False))
+        raise SystemExit("strict resume across meshes did not refuse")
+    except ResumeMismatch:
+        pass
+    rep = resume_campaign(smaller, store, sharded=True,
+                          policy=RetryPolicy(elastic=True))
+    assert ("mesh" in [d[0] for d in rep.elastic_drift]), rep.elastic_drift
+    assert np.allclose(np.asarray(rep.result), ref, atol=1e-5)
+    print("elastic-resume: mesh drift allowed under elastic, refused strict OK")
+
+    print("ALL-OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Atomicity contract of ``repro.train.checkpoint`` (DESIGN.md §5).
+
+The promise under test: a crash at ANY point during a save never
+corrupts what ``latest_step`` offers — the newest *visible* checkpoint
+always restores intact, because saves land in a ``.tmp`` directory and
+become visible only via the final atomic rename.  A child process is
+SIGKILLed while its async writer is mid-save to prove it; the
+corrupted-manifest cases pin the refusal behavior when the disk (not
+the writer) is the liar.
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.train import checkpoint
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _tree(step: int) -> dict:
+    return {"w": np.full((8, 8), float(step), np.float32),
+            "b": np.arange(4, dtype=np.float32) * step}
+
+
+# ------------------------------------------------ kill mid-save (child) ----
+CHILD = textwrap.dedent("""
+    import os, signal, sys
+    import numpy as np
+    from repro.train import checkpoint
+
+    ckpt = sys.argv[1]
+    # step 1: landed and fsync-visible before the crash window opens
+    tree1 = {"w": np.full((8, 8), 1.0, np.float32),
+             "b": np.arange(4, dtype=np.float32)}
+    checkpoint.save(ckpt, 1, tree1, block=True)
+    # step 2: a fat tree so the async writer is still inside the .tmp
+    # directory when the SIGKILL lands
+    tree2 = {"w": np.full((2048, 2048), 2.0, np.float32),
+             "b": np.arange(4, dtype=np.float32) * 2}
+    checkpoint.save(ckpt, 2, tree2, block=False)
+    print("KILLING", flush=True)
+    os.kill(os.getpid(), signal.SIGKILL)
+""")
+
+
+def test_sigkill_mid_save_leaves_latest_restorable(tmp_path):
+    """Kill the writer mid-``.tmp`` save: whatever ``latest_step`` then
+    reports must restore intact — either the fully-landed step 1, or
+    step 2 if its rename won the race; never a half-written tree."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", CHILD, str(tmp_path)],
+                       env=env, capture_output=True, text=True, timeout=300)
+    assert r.returncode == -signal.SIGKILL, (r.returncode, r.stderr[-2000:])
+    assert "KILLING" in r.stdout
+
+    step = checkpoint.latest_step(str(tmp_path))
+    assert step in (1, 2)
+    like = _tree(step)
+    got = checkpoint.restore(str(tmp_path), step, like)
+    assert (np.asarray(got["w"]) == like["w"]).all()
+    assert (np.asarray(got["b"]) == like["b"]).all()
+
+
+# ------------------------------------------------- corrupted manifests ----
+def test_latest_step_skips_corrupt_manifest(tmp_path):
+    checkpoint.save(str(tmp_path), 1, _tree(1), block=True)
+    checkpoint.save(str(tmp_path), 2, _tree(2), block=True)
+    with open(tmp_path / "step_2" / "manifest.json", "w") as f:
+        f.write('{"step": 2, "leav')          # truncated mid-write
+    assert checkpoint.latest_step(str(tmp_path)) == 1
+    got = checkpoint.restore(str(tmp_path), 1, _tree(1))
+    assert (np.asarray(got["w"]) == 1.0).all()
+
+
+def test_restore_refuses_corrupt_manifest(tmp_path):
+    checkpoint.save(str(tmp_path), 3, _tree(3), block=True)
+    with open(tmp_path / "step_3" / "manifest.json", "w") as f:
+        f.write("not json at all")
+    with pytest.raises(ValueError, match="corrupt|manifest"):
+        checkpoint.restore(str(tmp_path), 3, _tree(3))
+
+
+def test_restore_refuses_manifest_without_leaves(tmp_path):
+    checkpoint.save(str(tmp_path), 3, _tree(3), block=True)
+    checkpoint.save(str(tmp_path), 4, _tree(4), block=True)
+    with open(tmp_path / "step_4" / "manifest.json", "w") as f:
+        json.dump({"step": 4}, f)             # parses, but no leaves table
+    with pytest.raises(ValueError, match="corrupt"):
+        checkpoint.restore(str(tmp_path), 4, _tree(4))
+    assert checkpoint.latest_step(str(tmp_path)) == 3   # skipped by resume
+
+
+def test_tmp_dirs_invisible_to_latest_step(tmp_path):
+    checkpoint.save(str(tmp_path), 5, _tree(5), block=True)
+    os.makedirs(tmp_path / "step_9.tmp12345")
+    with open(tmp_path / "step_9.tmp12345" / "manifest.json", "w") as f:
+        json.dump({"step": 9, "leaves": {}}, f)
+    assert checkpoint.latest_step(str(tmp_path)) == 5

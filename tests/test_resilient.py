@@ -1,0 +1,395 @@
+"""Resumable-campaign contracts (docs/resilience.md, DESIGN.md §14).
+
+The load-bearing property: a campaign that crashes and resumes — at any
+leg boundary, with any of the injected faults along the way — produces a
+final field **bit-exact** equal to the uninterrupted
+``StencilProgram.run(x, T)``, across 2-D/3-D specs and boundary
+families.  Everything else pins the bounded-recovery contract: every
+injected fault resolves to a recovery or a typed ``CampaignFault``,
+deterministically under a seeded injector and a simulated clock — never
+a hang, never a raw traceback.
+
+Sharded-campaign assertions (bit-exact resume over a mesh, elastic
+restore after device loss) run in a child process with 8 faked CPU
+devices (``multidev_resilient_child.py``), per the multi-device
+isolation rule in ``tests/test_sharded.py``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api.boundary import Boundary
+from repro.api.program import compile_stencil
+from repro.core.stencil_spec import get
+from repro.faults import FaultConfig, FaultInjector, SimClock
+from repro.resilient import (CampaignFault, CampaignStore, HealthEnvelope,
+                             HealthViolation, ResumeMismatch, RetryPolicy,
+                             leg_schedule, resume_campaign, run_campaign)
+from repro.resilient.health import probe
+from repro.stencils.data import init_domain
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CASES = [("j2d5pt", (12, 14)), ("j3d7pt", (6, 8, 5))]
+BOUNDARIES = [Boundary.dirichlet(0.0), Boundary.periodic()]
+T_TOTAL = 11      # with t=2: legs of 2 steps + a remainder leg of 1
+
+_PROGS: dict = {}
+
+
+def _prog(name, shape, boundary):
+    key = (name, shape, boundary)
+    if key not in _PROGS:
+        _PROGS[key] = compile_stencil(get(name), shape, t=2,
+                                      boundary=boundary)
+    return _PROGS[key]
+
+
+def _setup(name, shape, boundary):
+    prog = _prog(name, shape, boundary)
+    x = init_domain(get(name), shape)
+    ref = prog.run(x, T_TOTAL)
+    return prog, x, np.asarray(ref)
+
+
+def _bitexact(a, b) -> bool:
+    return (np.asarray(a) == np.asarray(b)).all()
+
+
+class Crash(Exception):
+    """Stands in for SIGKILL inside one test process."""
+
+
+def _crash_after(leg_idx, store=None):
+    def hook(leg, steps_done):
+        if leg == leg_idx:
+            if store is not None:
+                store.wait()       # post-leg: the checkpoint landed
+            raise Crash()
+    return hook
+
+
+# ------------------------------------------------ bit-exact resumption ----
+@pytest.mark.parametrize("name,shape", CASES)
+@pytest.mark.parametrize("boundary", BOUNDARIES,
+                         ids=[b.kind for b in BOUNDARIES])
+@pytest.mark.parametrize("interrupt", ["post_leg", "mid_save"])
+def test_resumed_campaign_bitexact(tmp_path, name, shape, boundary,
+                                   interrupt):
+    """Crash after leg 2 — either after its checkpoint landed (post-leg)
+    or with that save dying mid-``tmp`` (a mid-leg/mid-save crash, the
+    leg is lost and replayed) — then resume: the final field must equal
+    the uninterrupted ``run`` bitwise."""
+    prog, x, ref = _setup(name, shape, boundary)
+    store = CampaignStore(str(tmp_path))
+    faults = None
+    if interrupt == "mid_save":
+        faults = FaultInjector(FaultConfig(crash_save_at_leg=(2,)))
+    with pytest.raises(Crash):
+        run_campaign(prog, x, T_TOTAL, store=store, faults=faults,
+                     on_leg=_crash_after(2, store))
+    rep = resume_campaign(prog, store)
+    assert rep.resumed_from == (2 if interrupt == "post_leg" else 1)
+    assert _bitexact(rep.result, ref)
+
+
+@pytest.mark.parametrize("every", [1, 2, 5])
+def test_fresh_campaign_matches_run(tmp_path, every):
+    """No crash at all: the legged executor IS ``run``, for any leg
+    width (including one wider than the whole campaign)."""
+    prog, x, ref = _setup("j2d5pt", (12, 14), Boundary.periodic())
+    rep = prog.run_resumable(x, T_TOTAL, store=str(tmp_path / str(every)),
+                             every=every)
+    assert _bitexact(rep.result, ref)
+    assert rep.legs_run == rep.legs_total == len(
+        leg_schedule(T_TOTAL, prog.t, every))
+
+
+def test_run_resumable_zero_steps(tmp_path):
+    prog, x, _ = _setup("j2d5pt", (12, 14), Boundary.dirichlet(0.0))
+    rep = prog.run_resumable(x, 0, store=str(tmp_path))
+    assert _bitexact(rep.result, x) and rep.legs_total == 0
+
+
+def test_leg_schedule_alignment():
+    assert leg_schedule(10, 4, 1) == [(1, 4), (2, 4), (3, 2)]
+    assert leg_schedule(16, 4, 2) == [(1, 8), (2, 8)]
+    assert leg_schedule(3, 8, 1) == [(1, 3)]
+    assert leg_schedule(0, 4, 1) == []
+    with pytest.raises(ValueError):
+        leg_schedule(4, 4, 0)
+
+
+# ------------------------------------------------- fault -> recovery ----
+def test_nan_leg_rolls_back_and_recovers(tmp_path):
+    """A one-shot NaN blow-up at leg 3: health catches it in the fused
+    probe, the runner rolls back one leg and the clean retry proceeds —
+    still bit-exact."""
+    prog, x, ref = _setup("j2d5pt", (12, 14), Boundary.dirichlet(0.0))
+    clk = SimClock()
+    inj = FaultInjector(FaultConfig(nan_at_leg=(3,)))
+    rep = run_campaign(prog, x, T_TOTAL, store=str(tmp_path), faults=inj,
+                       clock=clk)
+    assert _bitexact(rep.result, ref)
+    assert rep.rollbacks == 1 and rep.retries == 1
+    assert rep.faults_injected["nan_leg"] == 1
+    assert clk.now_ms() > 0          # backoff advanced the injected clock
+
+
+def test_persistent_nan_exhausts_into_typed_fault(tmp_path):
+    """NaN re-injected on every retry: the bounded ladder must end in
+    ``CampaignFault('health')`` pinned to the leg — the no-hang case."""
+    prog, x, _ = _setup("j2d5pt", (12, 14), Boundary.dirichlet(0.0))
+    inj = FaultInjector(FaultConfig(nan_at_leg=(3,), nan_persistent=True))
+    with pytest.raises(CampaignFault) as ei:
+        run_campaign(prog, x, T_TOTAL, store=str(tmp_path), faults=inj,
+                     clock=SimClock(), policy=RetryPolicy(max_retries=2))
+    assert ei.value.reason == "health" and ei.value.leg == 3
+    assert isinstance(ei.value.__cause__, HealthViolation)
+
+
+def test_corrupt_checkpoint_skipped_at_rollback(tmp_path):
+    """Leg 2's checkpoint is corrupted on disk; the NaN at leg 3 forces
+    a rollback, which must skip the bad checkpoint (checksum refusal),
+    land on leg 1, and replay — bit-exact."""
+    prog, x, ref = _setup("j2d5pt", (12, 14), Boundary.dirichlet(0.0))
+    inj = FaultInjector(FaultConfig(corrupt_ckpt_at_leg=(2,),
+                                    nan_at_leg=(3,)))
+    rep = run_campaign(prog, x, T_TOTAL, store=str(tmp_path), faults=inj,
+                       clock=SimClock())
+    assert _bitexact(rep.result, ref)
+    assert [leg for leg, _ in rep.corrupt_skipped] == [2]
+
+
+def test_all_checkpoints_corrupt_is_typed(tmp_path):
+    """Every payload on disk flipped after the crash: resume must refuse
+    with ``CampaignFault('checkpoints_corrupt')``, not restart silently
+    from garbage."""
+    prog, x, _ = _setup("j2d5pt", (12, 14), Boundary.dirichlet(0.0))
+    store = CampaignStore(str(tmp_path))
+    with pytest.raises(Crash):
+        run_campaign(prog, x, T_TOTAL, store=store,
+                     on_leg=_crash_after(2, store))
+    from repro.resilient.store import PAYLOAD, _flip_payload_bytes
+    for leg in store.legs():
+        _flip_payload_bytes(os.path.join(store.root, f"leg_{leg}", PAYLOAD))
+    with pytest.raises(CampaignFault) as ei:
+        resume_campaign(prog, store)
+    assert ei.value.reason == "checkpoints_corrupt"
+
+
+def test_resume_without_checkpoint_is_typed(tmp_path):
+    prog, _, _ = _setup("j2d5pt", (12, 14), Boundary.dirichlet(0.0))
+    with pytest.raises(CampaignFault) as ei:
+        resume_campaign(prog, CampaignStore(str(tmp_path)))
+    assert ei.value.reason == "no_checkpoint"
+
+
+def test_resume_fingerprint_mismatch_refused(tmp_path):
+    """A checkpoint written under one program must refuse to resume
+    under a drifted one — wrong depth, wrong boundary — and the error
+    names each mismatched field with its fix."""
+    prog, x, _ = _setup("j2d5pt", (12, 14), Boundary.dirichlet(0.0))
+    store = CampaignStore(str(tmp_path))
+    with pytest.raises(Crash):
+        run_campaign(prog, x, T_TOTAL, store=store,
+                     on_leg=_crash_after(2, store))
+    drifted = compile_stencil(get("j2d5pt"), (12, 14), t=3,
+                              boundary=Boundary.periodic())
+    with pytest.raises(ResumeMismatch) as ei:
+        resume_campaign(drifted, store)
+    msg = str(ei.value)
+    assert "t:" in msg and "boundary:" in msg and "fix:" in msg
+
+
+def test_permanent_error_is_not_retried(tmp_path):
+    """A genuine bug in the loop surfaces as ``CampaignFault('internal')``
+    on the first hit — no rollback/retry burn."""
+    prog, x, _ = _setup("j2d5pt", (12, 14), Boundary.dirichlet(0.0))
+
+    class Boom(HealthEnvelope):
+        def judge(self, **kw):
+            raise TypeError("boom")
+
+    with pytest.raises(CampaignFault) as ei:
+        run_campaign(prog, x, T_TOTAL, store=str(tmp_path), health=Boom(),
+                     clock=SimClock())
+    assert ei.value.reason == "internal" and "TypeError" in str(ei.value)
+
+
+# ------------------------------------------------------ health envelope ----
+def test_health_envelope_judgements():
+    env = HealthEnvelope(max_growth=1.5, max_rms=10.0)
+    env.judge(finite=True, rms=1.0, prev_rms=0.9, leg=1)       # healthy
+    with pytest.raises(HealthViolation) as ei:
+        env.judge(finite=False, rms=float("nan"), prev_rms=None, leg=2)
+    assert ei.value.reason == "nonfinite"
+    with pytest.raises(HealthViolation) as ei:
+        env.judge(finite=True, rms=11.0, prev_rms=10.5, leg=3)
+    assert ei.value.reason == "rms_ceiling"
+    with pytest.raises(HealthViolation) as ei:
+        env.judge(finite=True, rms=2.0, prev_rms=1.0, leg=4)
+    assert ei.value.reason == "rms_drift"
+
+
+def test_probe_is_one_fused_reduction():
+    finite, rms = probe(jnp.ones((4, 4)))
+    assert finite and rms == pytest.approx(1.0)
+    finite, _ = probe(jnp.array([[1.0, float("inf")], [0.0, 2.0]]))
+    assert not finite
+
+
+def test_rms_envelope_trips_campaign(tmp_path):
+    """An absurdly tight rms ceiling turns a healthy run into a typed
+    health fault — the drift guard is live end-to-end."""
+    prog, x, _ = _setup("j2d5pt", (12, 14), Boundary.dirichlet(0.0))
+    with pytest.raises(CampaignFault) as ei:
+        run_campaign(prog, x, T_TOTAL, store=str(tmp_path),
+                     health=HealthEnvelope(max_rms=1e-30),
+                     clock=SimClock(), policy=RetryPolicy(max_retries=1))
+    assert ei.value.reason == "health"
+
+
+# ---------------------------------------------------------- store unit ----
+def test_store_atomicity_and_prune(tmp_path):
+    store = CampaignStore(str(tmp_path), keep=2)
+    x = np.arange(12.0, dtype=np.float32).reshape(3, 4)
+    for leg in (1, 2, 3):
+        store.save(leg, x * leg, {"steps_done": leg}, block=True)
+    assert store.legs() == [2, 3]          # pruned to keep=2
+    leg, arr, man, skipped = store.load_latest_good()
+    assert leg == 3 and man["steps_done"] == 3 and not skipped
+    assert (arr == x * 3).all()
+    # a crashed save leaves only an invisible tmp dir
+    store.save(4, x, {"steps_done": 4}, block=True, sabotage="crash")
+    assert store.latest_leg() == 3
+    assert any(".tmp" in d for d in os.listdir(tmp_path))
+
+
+def test_store_checksum_refuses_corrupt_payload(tmp_path):
+    from repro.resilient.store import CorruptCheckpoint
+    store = CampaignStore(str(tmp_path))
+    x = np.ones((5, 5), np.float32)
+    store.save(1, x, {"steps_done": 1}, block=True)
+    store.save(2, x * 2, {"steps_done": 2}, block=True, sabotage="corrupt")
+    with pytest.raises(CorruptCheckpoint):
+        store.load(2)
+    leg, _, _, skipped = store.load_latest_good()
+    assert leg == 1 and [s[0] for s in skipped] == [2]
+
+
+def test_store_manifest_garbage_is_corrupt(tmp_path):
+    from repro.resilient.store import MANIFEST, CheckpointError
+    store = CampaignStore(str(tmp_path))
+    store.save(1, np.ones(3, np.float32), {"steps_done": 1}, block=True)
+    with open(os.path.join(store.root, "leg_1", MANIFEST), "w") as f:
+        f.write("{not json")
+    with pytest.raises(CheckpointError):
+        store.load_latest_good()
+
+
+# --------------------------------------------------------- seeded soak ----
+def _soak(seed: int, tmp_path) -> dict:
+    prog, x, ref = _setup("j2d5pt", (12, 14), Boundary.dirichlet(0.0))
+    cfg = FaultConfig(seed=seed, nan_at_leg=(2, 4),
+                      corrupt_ckpt_at_leg=(3,), crash_save_at_leg=(5,))
+    inj, clk = FaultInjector(cfg), SimClock()
+    store = CampaignStore(str(tmp_path / f"s{seed}"))
+    try:
+        rep = run_campaign(prog, x, T_TOTAL, store=store, faults=inj,
+                           clock=clk)
+        out = {"outcome": "ok", "bitexact": _bitexact(rep.result, ref),
+               "rollbacks": rep.rollbacks, "retries": rep.retries,
+               "injected": rep.faults_injected}
+    except CampaignFault as e:
+        out = {"outcome": e.reason, "injected": inj.stats()}
+    out["clock_ms"] = round(clk.now_ms(), 6)
+    return out
+
+
+def test_soak_every_fault_resolves_deterministically(tmp_path):
+    """The acceptance soak, short form: under a mixed fault diet every
+    campaign either completes bit-exact or resolves to a typed
+    ``CampaignFault`` — and rerunning a seed reproduces the identical
+    outcome, clock included."""
+    for seed in (0, 1):
+        a = _soak(seed, tmp_path / "a")
+        b = _soak(seed, tmp_path / "b")
+        assert a == b
+        assert a["outcome"] == "ok" and a["bitexact"]
+
+
+@pytest.mark.slow
+def test_soak_long_seeded(tmp_path):
+    """Longer soak across more seeds and heavier fault diets (slow tier)."""
+    for seed in range(6):
+        prog, x, ref = _setup("j2d5pt", (12, 14), Boundary.periodic())
+        cfg = FaultConfig(seed=seed, nan_at_leg=(1, 3, 5),
+                          corrupt_ckpt_at_leg=(2, 4),
+                          crash_save_at_leg=(3,),
+                          nan_persistent=(seed % 3 == 2))
+        inj, clk = FaultInjector(cfg), SimClock()
+        try:
+            rep = run_campaign(prog, x, T_TOTAL,
+                               store=str(tmp_path / f"L{seed}"),
+                               faults=inj, clock=clk,
+                               policy=RetryPolicy(max_retries=2, seed=seed))
+            assert _bitexact(rep.result, ref)
+        except CampaignFault as e:
+            assert e.reason in ("health", "retries_exhausted")
+
+
+# ------------------------------------------------------ sharded (child) ----
+@pytest.mark.slow
+def test_sharded_campaigns_on_faked_mesh():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests",
+                                      "multidev_resilient_child.py")],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, \
+        f"child failed:\n{r.stdout[-4000:]}\n{r.stderr[-4000:]}"
+    assert "ALL-OK" in r.stdout
+
+
+# --------------------------------------------------- CLI crash-restart ----
+@pytest.mark.slow
+def test_cli_kill_and_resume_bitexact(tmp_path):
+    """The CI smoke, as a test: run, SIGKILL after leg 2 (exit 137),
+    resume with ``--resume auto``, diff against the uninterrupted run."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    base = [sys.executable, "-m", "repro.launch.stencil_run",
+            "--stencil", "j2d5pt", "--scale", "48", "--T", "24"]
+    ref, out = str(tmp_path / "ref.npy"), str(tmp_path / "out.npy")
+    r = subprocess.run(base + ["--checkpoint-dir", str(tmp_path / "a"),
+                               "--out", ref],
+                       env=env, capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    r = subprocess.run(base + ["--checkpoint-dir", str(tmp_path / "b"),
+                               "--kill-after-leg", "2"],
+                       env=env, capture_output=True, text=True, timeout=600)
+    assert r.returncode == -9 or r.returncode == 137
+    r = subprocess.run(base + ["--checkpoint-dir", str(tmp_path / "b"),
+                               "--resume", "auto", "--out", out],
+                       env=env, capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "resumed@leg2" in r.stdout
+    assert (np.load(ref) == np.load(out)).all()
+
+
+def test_report_is_json_serializable(tmp_path):
+    """Operators log reports; everything but the array must serialize."""
+    prog, x, _ = _setup("j2d5pt", (12, 14), Boundary.dirichlet(0.0))
+    rep = prog.run_resumable(x, T_TOTAL, store=str(tmp_path))
+    d = {k: v for k, v in rep.__dict__.items() if k != "result"}
+    json.dumps(d)

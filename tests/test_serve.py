@@ -122,6 +122,45 @@ def test_tenant_cap_rejects_typed():
     assert a.ok and c.ok
 
 
+def test_round_robin_prevents_tenant_starvation():
+    """Starvation regression: a quiet tenant's single request, submitted
+    behind a noisy tenant's burst into the same bucket, must land in the
+    FIRST formed batch (per-tenant round-robin slot filling), not wait
+    out the whole burst FIFO-style."""
+    core = _core(max_batch=4)
+    spec = get("j2d5pt")
+    noisy = [core.submit(ServeRequest(spec, init_domain(spec, (8, 8), seed=i),
+                                      total_t=2, tenant="noisy"))
+             for i in range(8)]
+    quiet = core.submit(ServeRequest(spec, init_domain(spec, (8, 8), seed=99),
+                                     total_t=2, tenant="quiet"))
+    batches = core.poll(force=True)
+    assert len(batches) == 3                      # 9 tickets / max_batch 4
+    first = [tk.request.tenant for tk in batches[0].tickets]
+    assert "quiet" in first, f"quiet tenant starved: first batch {first}"
+    # oldest-first within the noisy tenant is preserved
+    assert [tk for tk in batches[0].tickets
+            if tk.request.tenant == "noisy"] == noisy[:3]
+    assert core.counters["multi_tenant_batches"] == 1
+    for b in batches:
+        core.dispatch(b)
+    assert quiet.ok and all(tk.ok for tk in noisy)
+
+
+def test_round_robin_single_tenant_is_fifo():
+    """With one tenant the fairness path must be the old FIFO exactly."""
+    core = _core(max_batch=4)
+    spec = get("j2d5pt")
+    tks = [core.submit(ServeRequest(spec, init_domain(spec, (8, 8), seed=i),
+                                    total_t=2, tenant="solo"))
+           for i in range(6)]
+    batches = core.poll(force=True)
+    assert [tk for b in batches for tk in b.tickets] == tks
+    assert core.counters["multi_tenant_batches"] == 0
+    for b in batches:
+        core.dispatch(b)
+
+
 def test_oversized_and_invalid_resolve_alone():
     """Validation happens BEFORE coalescing: a poison request can never
     join a bucket."""

@@ -173,3 +173,49 @@ def test_bench_gate_single_entry_ok(tmp_path):
     one = tmp_path / "one.json"
     one.write_text(json.dumps({"entries": [_entry("a", **{"kernel/x": 1.0})]}))
     assert _run_gate(one).returncode == 0
+
+
+def test_bench_gate_missing_rows_table_degrades(tmp_path):
+    """A baseline entry without a 'rows' table (hand-edited or truncated)
+    warns and passes instead of dying on a KeyError — the advisory gate
+    must never be the thing that breaks CI."""
+    p = tmp_path / "norows.json"
+    p.write_text(json.dumps({"entries": [
+        {"rev": "a", "timestamp": "t"},          # no rows at all
+        _entry("b", **{"kernel/x": 100.0}),
+    ]}))
+    r = _run_gate(p)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "WARNING" in r.stdout
+
+
+def test_bench_gate_row_missing_us_per_call_skipped(tmp_path):
+    """A row lacking ``us_per_call`` in either entry is warned and
+    skipped; the remaining rows still gate (and can still fail)."""
+    entries = [_entry("a", **{"kernel/x": 100.0, "kernel/y": 50.0}),
+               _entry("b", **{"kernel/x": 100.0, "kernel/y": 45.0})]
+    del entries[0]["rows"]["kernel/x"]["us_per_call"]
+    p = tmp_path / "partial.json"
+    p.write_text(json.dumps({"entries": entries}))
+    r = _run_gate(p)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "skipped" in r.stdout and "kernel/y" in r.stdout
+
+    # the healthy rows still catch a real regression
+    entries = [_entry("a", **{"kernel/x": 100.0, "kernel/y": 50.0}),
+               _entry("b", **{"kernel/x": 100.0, "kernel/y": 75.0})]
+    del entries[1]["rows"]["kernel/x"]["us_per_call"]
+    p.write_text(json.dumps({"entries": entries}))
+    r = _run_gate(p)
+    assert r.returncode == 1
+    assert "FAIL" in r.stdout
+
+
+def test_bench_gate_missing_rev_fields_degrade(tmp_path):
+    p = tmp_path / "norev.json"
+    e = _entry("a", **{"kernel/x": 100.0})
+    del e["rev"], e["timestamp"]
+    p.write_text(json.dumps({"entries": [
+        e, _entry("b", **{"kernel/x": 100.0})]}))
+    r = _run_gate(p)
+    assert r.returncode == 0, r.stdout + r.stderr
