@@ -141,6 +141,8 @@ def _program_rows():
 
 
 def rows():
+    from repro.tuning.analytic import analytic_bytes_per_step
+
     out = []
     for name, shape, t in KERNEL_CASES:
         spec = get(name)
@@ -149,8 +151,14 @@ def rows():
         us_blocked = time_fn(lambda: percall(x))
         us_naive = time_fn(lambda: ref.reference(x, spec, t))
         grid = resolve_geometry(spec, t, shape)["grid"]
+        # lowered-HLO HBM bytes per step of the same plan-less program
+        # the wall-time row runs — deterministic, so scripts/bench_gate.py
+        # can flag traffic regressions under any machine load
+        ab = analytic_bytes_per_step(
+            compile_stencil(spec, shape, t=t, plan=None, interpret=True), t)
         out.append((f"kernel/{name}-t{t}", us_blocked,
                     f"naive_us={us_naive:.0f}|"
+                    f"analytic_bytes={ab:.0f}|"
                     f"hbm_traffic_ratio={modeled_traffic_ratio(spec, t, shape):.2f}x|"
                     f"reads_per_elem={reads_per_elem(spec, t, shape):.3f}|"
                     f"grid={'x'.join(map(str, grid))}|"

@@ -1,137 +1,53 @@
-"""Autotune sweep over (t, tile, mode) per Table-2 spec, vs the §6 planner.
+"""DEPRECATED shim -> ``python -m repro.tuning sweep`` (docs/tuning.md).
 
-The paper's auto-tuning competitors (ARTEMIS, DRSTENCIL) search the
-configuration space empirically; EBISU's planner derives it analytically.
-This script runs both on reduced CPU domains: a wall-time sweep over
-``(t, bh|zc, mode)`` in interpret mode, then a cross-check of the
-planner's analytic pick against the sweep's best.
+The one-off (t, tile, mode) sweep this script used to run grew into the
+``repro.tuning`` subsystem: a budgeted successive-halving search seeded
+by the §6 plan's neighborhood, normalized by a naive-reference control,
+pruned analytically from the lowered HLO, and persisted to a plan DB so
+``compile_stencil(..., mode="tuned")`` replays winners with zero search.
 
-Usage:
-    PYTHONPATH=src python scripts/autotune_stencil.py \
-        [--stencil j2d5pt,j3d7pt] [--scale 64] [--depths 1,2,4,6] \
-        [--json autotune.json]
-    # user-defined stencils tune through the same pipeline (no registry):
-    PYTHONPATH=src python scripts/autotune_stencil.py \
-        --taps '[[[0,0],0.6],[[0,1],0.1],[[0,-1],0.1],[[1,0],0.1],[[-1,0],0.1]]'
-    PYTHONPATH=src python scripts/autotune_stencil.py --spec-json my.json
+Per the PR 3 shim policy (README.md), this wrapper stays for two PR
+cycles: it warns once, translates the legacy flags, and delegates.
 
-The cross-check is advisory on CPU (interpret-mode wall time is a proxy,
-not v5e time): the planner optimizes the §5 model, the sweep measures the
-interpreter — agreement on *shape* (deeper-better-than-shallow, fused over
-scratch) is the signal, exact tile agreement is not expected.
+  * ``--stencil/--scale/--json/--taps/--spec-json/--normalize`` map 1:1;
+  * ``--depths`` is ignored (the search derives depths from the plan's
+    neighborhood instead of a user-supplied grid) — a warning says so;
+  * everything else (``--db``, ``--budget``, ``--candidates``, ...)
+    passes straight through to the ``sweep`` subcommand.
 """
 from __future__ import annotations
 
-import argparse
-import json
 import os
 import sys
+import warnings
 
-sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-
-import dataclasses  # noqa: E402
-
-from benchmarks.common import time_fn  # noqa: E402
-from repro.api import (compile_stencil, define_stencil, parse_taps,
-                       spec_from_json)
-from repro.core import roofline as rl
-from repro.core.planner import plan
-from repro.core.stencil_spec import TABLE2, get
-from repro.kernels import ref
-from repro.stencils.data import init_domain, reduced_domain
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
 
 
-def _pinned(p, spec, t: int, tile: int):
-    """The §6 plan with (t, leading tile) pinned to a sweep point — the
-    program front door honors an explicit plan verbatim, which is how the
-    empirical search drives the same dispatch path the planner does."""
-    return dataclasses.replace(
-        p, t=t, halo=spec.halo(t), block=(tile,) + p.block[1:],
-        lazy_batch=min(p.lazy_batch, tile))
+def main(argv=None) -> int:
+    from repro.tuning.cli import main as cli_main
 
-
-def sweep_one(spec_or_name, scale: int, depths: list[int]):
-    spec = (get(spec_or_name) if isinstance(spec_or_name, str)
-            else spec_or_name)
-    name = spec.name
-    shape = reduced_domain(spec, scale)
-    x = init_domain(spec, shape)
-    p = plan(spec, rl.TPU_V5E)
-    rows = []
-    tiles = (64, 128, 256) if spec.ndim == 2 else (16, 32)
-    modes = ("fused", "scratch") if spec.ndim == 2 else ("fused",)
-    for t in sorted(set(depths) | {min(p.t, max(depths))}):
-        want = ref.reference(x, spec, t)
-        for tile in tiles:
-            for mode in modes:
-                prog = compile_stencil(spec, shape, t=t, mode=mode,
-                                       interpret=True,
-                                       plan=_pinned(p, spec, t, tile))
-                fn = lambda: prog.apply(x)  # noqa: E731
-                out = fn()
-                err = float(abs(out - want).max())
-                us = time_fn(fn, warmup=1, iters=3)
-                rows.append({"stencil": name, "t": t, "tile": tile,
-                             "mode": mode, "us": round(us, 1),
-                             "us_per_step": round(us / t, 1),
-                             "maxerr": err})
-                assert err < 1e-4, rows[-1]
-    best = min(rows, key=lambda r: r["us_per_step"])
-    return {
-        "stencil": name, "domain": list(shape), "sweep": rows, "best": best,
-        "planner": {"t": p.t, "tile": p.block[0],
-                    "lazy_batch": p.lazy_batch,
-                    "pp_gcells": round(p.pp.pp_cells_per_s / 1e9, 1)},
-    }
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--stencil", default="all")
-    ap.add_argument("--taps", default=None,
-                    help="autotune a custom stencil from a JSON tap list")
-    ap.add_argument("--spec-json", default=None,
-                    help="autotune a custom stencil from a JSON spec file")
-    ap.add_argument("--normalize", action="store_true",
-                    help="rescale --taps coefficients to sum to 1")
-    ap.add_argument("--scale", type=int, default=64)
-    ap.add_argument("--depths", default="1,2,4")
-    ap.add_argument("--json", default=None)
-    args = ap.parse_args()
-    if args.taps or args.spec_json:
-        specs = [define_stencil(parse_taps(args.taps),
-                                normalize=args.normalize)
-                 if args.taps else spec_from_json(args.spec_json)]
-    else:
-        names = (list(TABLE2) if args.stencil == "all"
-                 else args.stencil.split(","))
-        unknown = [n for n in names if n not in TABLE2]
-        if unknown:
-            ap.error(f"unknown stencil(s) {unknown}; choose from "
-                     f"{list(TABLE2)} — or pass --taps/--spec-json for a "
-                     "custom stencil")
-        specs = [get(n) for n in names]
-    depths = [int(d) for d in args.depths.split(",")]
-
-    results = []
-    for spec in specs:
-        res = sweep_one(spec, args.scale, depths)
-        results.append(res)
-        b, p = res["best"], res["planner"]
-        agree_depth = b["t"] >= max(1, p["t"] // 2) or b["t"] == max(
-            r["t"] for r in res["sweep"])
-        print(f"[autotune] {res['stencil']:11s} best: t={b['t']} tile={b['tile']} "
-              f"mode={b['mode']} {b['us_per_step']:.0f}us/step | "
-              f"planner: t={p['t']} tile={p['tile']} "
-              f"lazy_batch={p['lazy_batch']} "
-              f"({'depth-consistent' if agree_depth else 'DEPTH MISMATCH'})",
-              flush=True)
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump(results, f, indent=2)
-            f.write("\n")
-        print(f"[autotune] wrote {args.json}")
+    warnings.warn(
+        "scripts/autotune_stencil.py is deprecated; use "
+        "`python -m repro.tuning sweep` (see docs/tuning.md)",
+        DeprecationWarning, stacklevel=2)
+    argv = list(sys.argv[1:] if argv is None else argv)
+    out, i = [], 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "--depths" or a.startswith("--depths="):
+            warnings.warn(
+                "--depths is ignored: the measured search derives its "
+                "depth candidates from the §6 plan's neighborhood",
+                stacklevel=2)
+            if a == "--depths":
+                i += 1                      # skip the flag's value too
+        else:
+            out.append(a)
+        i += 1
+    return cli_main(["sweep", *out])
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -15,6 +15,13 @@ before applying the threshold (and prints the factor it used), so a
 slow CI box doesn't fail healthy kernels and a fast one doesn't hide a
 real regression.  Entries without ``naive_us=`` rows gate unnormalized.
 
+A second, load-IMMUNE gate runs alongside: rows carrying
+``analytic_bytes=`` (HBM bytes per step counted from the lowered HLO by
+``repro.tuning.analytic``) are compared raw with ``--max-traffic-regress``
+(default 10%) — byte counts are deterministic, so this gate catches a
+traffic regression even when wall time is hopelessly load-contaminated
+(the PR 5 +17% false flag could not have confused it).
+
 Opt-in from the tier-1 gate:  ``bash scripts/tier1.sh --bench-gate``
 (run ``PYTHONPATH=src python -m benchmarks.run --only kernels`` first to
 append a fresh entry; CPU-interpret wall times are noisy, so the gate is
@@ -30,15 +37,28 @@ import sys
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _naive_us(row: dict) -> float | None:
-    """Pull the naive-reference control time out of a row's derived column."""
+def _derived_field(row: dict, field: str) -> float | None:
+    """Pull a numeric ``field=`` out of a row's pipe-separated derived
+    column (``naive_us=123|analytic_bytes=456|...``)."""
     for part in str(row.get("derived", "")).split("|"):
-        if part.startswith("naive_us="):
+        if part.startswith(field + "="):
             try:
                 return float(part.split("=", 1)[1])
             except ValueError:
                 return None
     return None
+
+
+def _naive_us(row: dict) -> float | None:
+    """The naive-reference control time (machine-load normalization)."""
+    return _derived_field(row, "naive_us")
+
+
+def _analytic_bytes(row: dict) -> float | None:
+    """The lowered-HLO bytes-per-step column (``repro.tuning.analytic``)
+    — deterministic, so it gates UNNORMALIZED: any growth is the code,
+    never the machine."""
+    return _derived_field(row, "analytic_bytes")
 
 
 def load_factor(prev_rows: dict, new_rows: dict) -> tuple[float, int]:
@@ -57,7 +77,38 @@ def load_factor(prev_rows: dict, new_rows: dict) -> tuple[float, int]:
     return med, len(ratios)
 
 
-def gate(path: str, max_regress: float) -> int:
+def traffic_gate(prev_rows: dict, new_rows: dict,
+                 max_regress: float) -> int:
+    """The load-immune half of the gate: per-row ``analytic_bytes=``
+    (lowered-HLO HBM bytes per step, ``repro.tuning.analytic``) compared
+    raw — byte counts are deterministic, so no normalization applies and
+    a slow CI box can neither fail a healthy kernel nor hide a real
+    traffic regression.  Rows without the field are skipped."""
+    pairs = [(name, _analytic_bytes(prev_rows[name]),
+              _analytic_bytes(new_rows[name]))
+             for name in sorted(prev_rows) if name in new_rows]
+    pairs = [(n, o, w) for n, o, w in pairs if o and w is not None]
+    if not pairs:
+        print("bench-gate: no analytic_bytes= rows in both entries — "
+              "traffic gate skipped")
+        return 0
+    print(f"bench-gate: analytic-traffic gate over {len(pairs)} row"
+          f"{'s' if len(pairs) != 1 else ''}, max growth "
+          f"{max_regress:.0%} (unnormalized — bytes are deterministic)")
+    status = 0
+    for name, old_b, new_b in pairs:
+        rel = new_b / old_b - 1.0
+        verdict = "OK"
+        if rel > max_regress:
+            verdict = "FAIL"
+            status = 1
+        print(f"  {name:24s} {old_b:14.0f}B -> {new_b:14.0f}B "
+              f"({rel:+.1%})  {verdict}")
+    return status
+
+
+def gate(path: str, max_regress: float,
+         max_traffic_regress: float = 0.10) -> int:
     try:
         with open(path) as f:
             entries = json.load(f).get("entries", [])
@@ -117,7 +168,8 @@ def gate(path: str, max_regress: float) -> int:
         us = new_rows[name].get("us_per_call")
         print(f"  {name:24s} new row"
               + (f" ({float(us):.1f}us)" if us is not None else ""))
-    print("bench-gate: " + ("FAIL — wall-time regression beyond threshold"
+    status |= traffic_gate(prev_rows, new_rows, max_traffic_regress)
+    print("bench-gate: " + ("FAIL — regression beyond threshold"
                             if status else "OK"))
     return status
 
@@ -127,8 +179,12 @@ def main(argv=None) -> int:
     ap.add_argument("--file", default=os.path.join(_ROOT, "BENCH_kernels.json"))
     ap.add_argument("--max-regress", type=float, default=0.15,
                     help="allowed fractional wall-time growth per row")
+    ap.add_argument("--max-traffic-regress", type=float, default=0.10,
+                    help="allowed fractional growth of a row's "
+                         "analytic_bytes= (lowered-HLO traffic; "
+                         "deterministic, gated unnormalized)")
     args = ap.parse_args(argv)
-    return gate(args.file, args.max_regress)
+    return gate(args.file, args.max_regress, args.max_traffic_regress)
 
 
 if __name__ == "__main__":

@@ -10,7 +10,12 @@ with call-graph trip-count multipliers:
     ``fusion(calls=%f)``, ``call(to_apply=%f)`` and ``conditional`` branches;
   * per computation we count
       - dot flops: 2 · prod(result dims) · prod(lhs contracting dims)
-        (matmuls dominate transformer flops; elementwise ignored, documented)
+        (matmuls dominate transformer flops);
+      - elementwise flops: 1 · prod(result dims) per floating-point
+        arithmetic op (add/multiply/…, transcendentals counted as 1) —
+        zero for transformer-scale modules next to the dots, but the
+        whole story for stencils, whose tap chains are dot-free FMA
+        cascades (``repro.tuning.analytic`` consumes this);
       - byte traffic: Σ (result + operand bytes) over non-trivial top-level
         instructions — the same per-op approximation cost_analysis uses;
       - collective result/wire bytes and counts (see analysis.hlo);
@@ -44,6 +49,14 @@ _COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute", "all-reduce-start", "all-gather-start",
                 "collective-permute-start", "all-to-all-start",
                 "reduce-scatter-start"}
+# floating-point arithmetic counted as 1 flop per result element; masks,
+# selects, compares, and index math are bookkeeping, not flops — matching
+# the paper's flops/cell convention (2 per tap FMA, §11.2)
+_EW_ARITH = {"add", "subtract", "multiply", "divide", "negate", "abs",
+             "maximum", "minimum", "power", "sqrt", "rsqrt", "exponential",
+             "exponential-minus-one", "log", "log-plus-one", "tanh",
+             "sine", "cosine", "atan2", "cbrt"}
+_FLOAT_DTYPES = ("f64", "f32", "f16", "bf16", "f8e4m3fn", "f8e5m2")
 
 
 def _dims(type_str):
@@ -57,6 +70,7 @@ def _dims(type_str):
 class Computation:
     name: str
     dot_flops: float = 0.0
+    ew_flops: float = 0.0
     bytes_accessed: float = 0.0
     coll_count: dict = dataclasses.field(default_factory=lambda: defaultdict(int))
     coll_result: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
@@ -149,6 +163,11 @@ def _parse_computations(text: str) -> dict[str, Computation]:
                 for callee in _OPERANDS.findall(grp):
                     cur.callees.append((callee, 1, False))
         # costs
+        if op in _EW_ARITH and type_str.lstrip().startswith(_FLOAT_DTYPES):
+            elems = 1
+            for d in _dims(type_str):
+                elems *= d
+            cur.ew_flops += float(elems)
         paren = line[line.index(op + "(") + len(op):]
         operand_names = _OPERANDS.findall(paren.split("),")[0])
         out_bytes = _shape_bytes(type_str)
@@ -216,6 +235,13 @@ class HloCost:
     coll_count: dict
     coll_result_bytes: dict
     coll_wire_bytes: dict
+    ew_flops: float = 0.0
+
+    @property
+    def total_flops(self):
+        """Dot plus elementwise flops — the full compute-term numerator
+        (dot-dominated for transformers, elementwise-only for stencils)."""
+        return float(self.dot_flops + self.ew_flops)
 
     @property
     def total_wire_bytes(self):
@@ -227,6 +253,8 @@ class HloCost:
 
     def as_dict(self):
         return {"dot_flops": self.dot_flops,
+                "ew_flops": self.ew_flops,
+                "total_flops": self.total_flops,
                 "bytes_accessed": self.bytes_accessed,
                 "coll_count": dict(self.coll_count),
                 "coll_result_bytes": dict(self.coll_result_bytes),
@@ -275,6 +303,8 @@ def analyze(text: str, entry: str | None = None) -> HloCost:
                     charge = max(0.0, charge - 2 * big)
             c.bytes_accessed += charge
     flops = sum(c.dot_flops * mult[c.name] for c in comps.values())
+    # execution multiplier (not mult_mem): fused-body arithmetic is real work
+    ew = sum(c.ew_flops * mult[c.name] for c in comps.values())
     byts = sum(c.bytes_accessed * mult_mem[c.name] for c in comps.values())
     cc: dict = defaultdict(float)
     cr: dict = defaultdict(float)
@@ -286,4 +316,5 @@ def analyze(text: str, entry: str | None = None) -> HloCost:
             cr[k] += v * mult[c.name]
         for k, v in c.coll_wire.items():
             cw[k] += v * mult[c.name]
-    return HloCost(float(flops), float(byts), dict(cc), dict(cr), dict(cw))
+    return HloCost(float(flops), float(byts), dict(cc), dict(cr), dict(cw),
+                   ew_flops=float(ew))

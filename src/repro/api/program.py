@@ -575,7 +575,8 @@ class StencilProgram:
     def __init__(self, key, spec: StencilSpec, shape: tuple[int, ...],
                  dtype, t: int, plan: EbisuPlan | None,
                  hw: rl.HardwareModel, boundary: Boundary, mode: str,
-                 interpret: bool, compute_dtype=None, mesh=None):
+                 interpret: bool, compute_dtype=None, mesh=None,
+                 tuned: dict | None = None):
         self._key = key
         self.spec = spec
         self.shape = shape
@@ -589,6 +590,10 @@ class StencilProgram:
         self.mesh = mesh
         self.compute_dtype = (jnp.dtype(compute_dtype) if compute_dtype
                               else jnp.float32)
+        # provenance of a mode="tuned" resolution: {"source": "plandb",
+        # "record": ...} on a DB hit, {"source": "analytic_fallback"} on
+        # a miss, None for programs compiled with an explicit mode
+        self.tuned = tuned
 
     # ------------------------------------------------------- execution ----
     def _check(self, x, batched: bool = False):
@@ -857,7 +862,8 @@ def compile_stencil(spec: StencilSpec, shape: tuple[int, ...], *,
                     boundary: Boundary | None = None, mode: str = "fused",
                     interpret: bool | None = None,
                     plan: EbisuPlan | None | str = "auto",
-                    compute_dtype=None, mesh=None) -> StencilProgram:
+                    compute_dtype=None, mesh=None,
+                    plan_db=None) -> StencilProgram:
     """Compile a stencil to an immutable :class:`StencilProgram`.
 
         from repro.api import Boundary, compile_stencil
@@ -886,6 +892,16 @@ def compile_stencil(spec: StencilSpec, shape: tuple[int, ...], *,
     ``EbisuPlan`` to pin tiles (autotuning), or ``None`` for the legacy
     request-default tiles the deprecated entry points used.
 
+    ``mode="tuned"`` resolves (t, block, lazy_batch, kernel family) from
+    the persistent plan DB (``repro.tuning``, guide in
+    ``docs/tuning.md``): a DB hit replays the *measured* winner with
+    zero search or timing; a miss falls back to the analytic plan
+    (``mode="fused"``) — run ``repro.tuning.tune(...)`` or ``python -m
+    repro.tuning sweep`` to warm the DB.  Either way ``prog.tuned``
+    records the provenance.  ``plan_db`` is a ``PlanDB``, a directory
+    path, or ``None`` for the default location; it is only consulted
+    for ``mode="tuned"``.
+
     ``mesh`` (a ``jax.sharding.Mesh``, an int, or a tuple — mesh axis
     ``k`` shards tensor dim ``k``) makes the program multi-device: the §6
     plan is resolved **per shard** (domain/mesh, since each device sees
@@ -901,6 +917,39 @@ def compile_stencil(spec: StencilSpec, shape: tuple[int, ...], *,
     shape = tuple(int(n) for n in shape)
     if len(shape) != spec.ndim:
         raise ValueError(f"{spec.name} is {spec.ndim}-D; got shape {shape}")
+    tuned_info = None
+    if mode == "tuned":
+        # plan resolution only: the DB record supplies depth, block,
+        # batch AND the kernel family — explicit overrides would make
+        # the record a lie, so they are refused with the fix spelled out
+        if t is not None:
+            raise ValueError(
+                "mode='tuned' resolves t from the plan DB; drop t= "
+                "(or compile mode='fused' with an explicit t to pin "
+                "depth yourself)")
+        if not (isinstance(plan, str) and plan == "auto"):
+            raise ValueError(
+                "mode='tuned' resolves the plan from the plan DB; drop "
+                "plan= (pass an explicit EbisuPlan with mode='fused'/"
+                "'scratch' to pin tiles yourself)")
+        if mesh is not None:
+            raise ValueError(
+                "mode='tuned' records are single-device measurements; "
+                "compile mesh= programs with an explicit mode (the "
+                "per-shard plan is derived analytically)")
+        from repro.tuning import plandb as _plandb
+        itp = (interpret if interpret is not None
+               else jax.default_backend() != "tpu")
+        rec = _plandb.resolve_db(plan_db).lookup(
+            spec, shape, "interpret" if itp else "native")
+        if rec is not None:
+            plan = _plandb.plan_from_record(spec, shape, hw, rec)
+            t = plan.t
+            mode = rec["plan"]["exec_mode"]
+            tuned_info = {"source": "plandb", "record": rec}
+        else:
+            mode = "fused"
+            tuned_info = {"source": "analytic_fallback"}
     valid_modes = ("fused", "scratch", "stream") if spec.ndim == 2 \
         else ("fused", "scratch")        # 3-D ignores scratch (seed compat)
     if mode not in valid_modes:
@@ -933,13 +982,15 @@ def compile_stencil(spec: StencilSpec, shape: tuple[int, ...], *,
         _sharded.validate_mesh_for(spec, shape, mesh, depth, boundary)
     key = (spec, shape, jnp.dtype(dtype).name, depth, hw.name,
            boundary, mode, bool(interpret), _plan_key(plan), cdtype.name,
-           _sharded.mesh_key(mesh))
+           _sharded.mesh_key(mesh),
+           None if tuned_info is None else ("tuned", tuned_info["source"]))
     cached = PROGRAM_CACHE.get(key)
     if cached is not None:
         return cached
     prog = StencilProgram(key, spec, shape, jnp.dtype(dtype), depth, plan,
                           hw, boundary, mode, bool(interpret),
-                          compute_dtype=cdtype, mesh=mesh)
+                          compute_dtype=cdtype, mesh=mesh,
+                          tuned=tuned_info)
     PROGRAM_CACHE.put(key, prog)
     return prog
 

@@ -1,0 +1,33 @@
+"""Measured autotuning with a persistent plan database (ROADMAP item 2).
+
+The §6 planner is analytic; ARTEMIS/DRSTENCIL — the paper's strongest
+baselines — are empirical searchers.  This package closes the loop:
+
+  * :mod:`repro.tuning.search` — budgeted successive-halving over
+    (t, block, lazy_batch, exec mode) candidates seeded by the analytic
+    plan's neighborhood, each timed min-of-N through the real
+    ``StencilProgram`` runners and scored by the ratio to an interleaved
+    naive-reference control (shared-CPU load hits both sides alike);
+  * :mod:`repro.tuning.plandb` — winners persisted as checksummed JSON
+    records keyed on (spec signature, shape bucket, hw fingerprint,
+    interpret/native), written atomically (tmp + ``os.rename``), so
+    ``compile_stencil(..., mode="tuned")`` resolves a measured plan with
+    ZERO search or timing on a warm DB;
+  * :mod:`repro.tuning.analytic` — the dormant ``analysis/hlo_cost``
+    wired to each candidate's *lowered* computation: byte/flop counts
+    that prune traffic-pathological candidates before any wall clock is
+    spent, and a load-immune bench gate signal (``analytic_bytes=``).
+
+CLI: ``python -m repro.tuning {sweep,show-db,prune-stale,check}``
+(guide: ``docs/tuning.md``).
+"""
+from repro.tuning.analytic import analytic_cost, analytic_bytes_per_step
+from repro.tuning.plandb import PlanDB, db_key, default_db_path, \
+    hw_fingerprint, plan_from_record
+from repro.tuning.search import Candidate, TuneResult, neighborhood, tune
+
+__all__ = [
+    "Candidate", "PlanDB", "TuneResult", "analytic_bytes_per_step",
+    "analytic_cost", "db_key", "default_db_path", "hw_fingerprint",
+    "neighborhood", "plan_from_record", "tune",
+]

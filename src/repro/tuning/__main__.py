@@ -1,0 +1,5 @@
+import sys
+
+from repro.tuning.cli import main
+
+sys.exit(main())

@@ -1,0 +1,67 @@
+"""HLO-analytic candidate costs: bytes/flops from the LOWERED program.
+
+``analysis/hlo_cost`` re-derives roofline inputs from ``as_text()`` with
+loop-aware trip multipliers; until now only ``launch/dryrun.py`` used
+it.  Here it prices *stencil tuning candidates*: each candidate's
+multi-sweep chain is lowered and compiled (no execution — XLA:CPU
+compiles the interpret-mode Pallas calls into plain HLO) and its HBM
+byte traffic + elementwise flops are counted exactly.  Two consumers:
+
+  * the measured search prunes candidates whose per-step traffic is a
+    multiple of the best candidate's before spending any wall clock on
+    them (``prune_ratio`` in :func:`repro.tuning.search.tune`);
+  * benchmarks carry ``analytic_bytes=`` per row, giving
+    ``scripts/bench_gate.py`` a traffic gate that shared-CPU load
+    cannot contaminate (wall time swings 1.4→70 ms on a noisy box;
+    lowered byte counts are deterministic).
+
+A deliberate non-goal: comparing blocked-candidate bytes against the
+*naive* reference's bytes.  Interpret-mode lowering materializes mask /
+iota / dynamic-slice machinery whose traffic exceeds the naive loop's
+on small domains, so the analytic numbers are meaningful RELATIVE to
+each other (same lowering pipeline, same machinery), not as an absolute
+roofline bound — docs/tuning.md, "What the analytic gate is not".
+"""
+from __future__ import annotations
+
+from repro.analysis.hlo_cost import HloCost, analyze
+from repro.api.program import ProgramCache
+
+# lowering+compiling a chain is ~0.2-0.5 s; candidates within a tune()
+# call and repeated bench/gate runs in one process share this cache
+ANALYTIC_CACHE = ProgramCache(128, "analytic")
+
+
+def lowered_text(program, total_t: int | None = None) -> str:
+    """The compiled HLO text of ``program.run(x, total_t)``'s chain —
+    lowered via ``jax.jit(...).lower(ShapeDtypeStruct)``: shapes only,
+    no arrays touched, no execution."""
+    import jax
+
+    total_t = program.t if total_t is None else int(total_t)
+    fn = jax.jit(program._run_fn(total_t))
+    arg = jax.ShapeDtypeStruct(program.shape, program.dtype)
+    return fn.lower(arg).compile().as_text()
+
+
+def analytic_cost(program, total_t: int | None = None) -> HloCost:
+    """Loop-aware :class:`HloCost` of the program's ``total_t``-step
+    chain (default: one sweep at the program's depth), memoized per
+    program key.
+
+        cost = analytic_cost(prog, total_t=prog.t)
+        cost.bytes_accessed, cost.ew_flops    # deterministic, load-immune
+    """
+    total_t = program.t if total_t is None else int(total_t)
+    return ANALYTIC_CACHE.get_or_build(
+        (program._key, total_t),
+        lambda: analyze(lowered_text(program, total_t)))
+
+
+def analytic_bytes_per_step(program, total_t: int | None = None) -> float:
+    """HBM bytes per simulated time step — the search's pruning metric
+    and the bench gate's traffic column (normalizing by ``total_t``
+    makes depths comparable: a deeper sweep amortizes its traffic over
+    more steps)."""
+    total_t = program.t if total_t is None else int(total_t)
+    return analytic_cost(program, total_t).bytes_accessed / max(1, total_t)
