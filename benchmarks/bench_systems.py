@@ -1,0 +1,61 @@
+"""``systems/`` family: fused multi-field trapezoid chain vs lockstep.
+
+For each shipped system the fused :class:`~repro.systems.SystemProgram`
+chain (one jitted dispatch for all fields and all ``T`` steps) is timed
+INTERLEAVED against ``run_lockstep`` (one separately jitted dispatch per
+field per step — ``T·n_fields`` dispatches, the classic sync-everywhere
+scheme).  ``time_pair`` keeps the ratio trustworthy on a noisy shared
+CPU: a neighbor-load burst degrades both sides alike.
+
+Acceptance tracking (ISSUE 9): ``speedup >= 1.0`` at ``t >= 4`` on at
+least one system means fusing the coupling beat per-field-per-step
+dispatch; both trajectories are the same numbers (asserted in
+``tests/test_systems.py``), so the row is purely a scheduling
+comparison.  Rows persist to ``BENCH_systems.json``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import time_pair
+from repro.api import Boundary
+from repro.systems import compile_system, get_system
+
+# (system, shape, fused depth, total steps) — t >= 4 per the acceptance
+# criterion; shapes sized so a row stays ~sub-second on a shared CPU
+CASES = (("gray-scott", (96, 96), 4, 16),
+         ("fdtd-acoustic", (96, 96), 4, 16),
+         ("advection-diffusion", (96, 96), 6, 24))
+
+
+def _fields(spec, shape):
+    rng = np.random.default_rng(7)
+    return {f: jnp.asarray(rng.uniform(0.2, 0.8, shape).astype(np.float32))
+            for f in spec.fields}
+
+
+def rows():
+    out = []
+    for name, shape, t, total in CASES:
+        spec = get_system(name)
+        prog = compile_system(spec, shape, t=t,
+                              boundary=Boundary.periodic())
+        x = _fields(spec, shape)
+        # compile both paths outside the timed region
+        prog.run(x, total), prog.run_lockstep(x, total)
+        us_fused, us_lock = time_pair(lambda: prog.run(x, total),
+                                      lambda: prog.run_lockstep(x, total))
+        out.append((
+            f"systems/{name}-t{t}-T{total}", us_fused,
+            f"lockstep_us={us_lock:.0f}|"
+            f"speedup={us_lock / us_fused:.2f}x|"
+            f"fields={spec.nfields}|radius={spec.radius}|"
+            f"dispatches={1}v{total * spec.nfields}|"
+            f"note=fused-chain-vs-per-field-lockstep-interleaved"))
+    return out
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(rows())

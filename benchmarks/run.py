@@ -22,7 +22,8 @@ BENCH_JSON = os.path.join(_ROOT, "BENCH_kernels.json")
 # per-family persistence: families absent here print CSV only
 PERSIST_FILES = {"kernels": BENCH_JSON,
                  "serve": os.path.join(_ROOT, "BENCH_serve.json"),
-                 "tuned": os.path.join(_ROOT, "BENCH_tuned.json")}
+                 "tuned": os.path.join(_ROOT, "BENCH_tuned.json"),
+                 "systems": os.path.join(_ROOT, "BENCH_systems.json")}
 
 
 def _git_rev() -> str:
@@ -102,9 +103,9 @@ def main() -> None:
                  "pass the bench gate)")
 
     from benchmarks import (bench_kernels, bench_resilient, bench_serve,
-                            bench_sharded, bench_tuned, fig7_speedups,
-                            fig8_resources, fig9_breakdown, lm_roofline,
-                            table2_suite, table3_depths)
+                            bench_sharded, bench_systems, bench_tuned,
+                            fig7_speedups, fig8_resources, fig9_breakdown,
+                            lm_roofline, table2_suite, table3_depths)
     from benchmarks.common import emit
 
     modules = [
@@ -118,6 +119,7 @@ def main() -> None:
         ("serve", bench_serve),
         ("resilient", bench_resilient),
         ("tuned", bench_tuned),
+        ("systems", bench_systems),
         ("lm_roofline", lm_roofline),
     ]
     print("name,us_per_call,derived")

@@ -1,0 +1,49 @@
+"""Coupled multi-field systems in 40 lines.
+
+Defines a Gray–Scott reaction-diffusion system, compiles it to ONE
+fused cross-field trapezoid chain, runs it under an insulating
+(zero-flux neumann) boundary, and checks the fused chain against the
+per-field-per-step lockstep reference.  Guide: docs/systems.md.
+
+Run:  PYTHONPATH=src python examples/coupled_systems.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.api import Boundary
+from repro.systems import compile_system, get_system, system_names
+
+print(f"shipped systems: {system_names()}")
+
+# 1. the spec: two fields, per-field diffusion couplings, a registered
+#    pointwise reaction — same open definition layer, lifted
+spec = get_system("gray-scott", F=0.035, k=0.065)
+print(f"spec: {spec!r}")
+print(f"cost: {spec.flops_per_cell:.0f} flops/cell "
+      f"({spec.per_field_flops()}), a_gm={spec.a_gm}")
+
+# 2. compile once: all fields advance inside one fused jitted program,
+#    4 temporal steps per sweep; the zero-flux neumann ring is
+#    re-pinned every step inside the same jit (exact at any depth)
+prog = compile_system(spec, (96, 96), t=4, boundary=Boundary.neumann())
+print(f"program: {prog!r}")
+
+# 3. seed: uniform u with a square v perturbation (the classic setup)
+rng = np.random.default_rng(0)
+u0 = jnp.asarray(np.full((96, 96), 0.9, np.float32))
+v0 = np.zeros((96, 96), np.float32)
+v0[40:56, 40:56] = 0.25 + 0.05 * rng.random((16, 16), np.float32)
+fields = {"u": u0, "v": jnp.asarray(v0)}
+
+# 4. run 24 steps = 6 fused sweeps (vs 48 lockstep dispatches)
+out = prog.run(fields, 24)
+
+# 5. trust: fused chain == per-field-per-step lockstep, exactly
+ref = prog.run_lockstep(fields, 24)
+err = max(float(jnp.abs(out[f] - ref[f]).max()) for f in spec.fields)
+print(f"fused chain vs lockstep after 24 steps: max err = {err:.2e}")
+assert err < 2e-5
+assert all(bool(jnp.isfinite(out[f]).all()) for f in spec.fields)
+print(f"u in [{float(out['u'].min()):.3f}, {float(out['u'].max()):.3f}], "
+      f"v in [{float(out['v'].min()):.3f}, {float(out['v'].max()):.3f}]")
+print("OK — temporal blocking spans the coupling, not just one field.")

@@ -28,6 +28,15 @@ with three kinds:
     when the tap set is mirror-symmetric per axis (the mirrored exterior
     then evolves as the mirror of the interior), which all nine Table-2
     sets are.  Checked at compile time.
+  * ``Boundary.neumann(flux=0.0)`` — flux boundary: the outward normal
+    derivative at every domain face is ``flux``, discretized as the
+    face-mirror ghost fill ``ghost(−k) = u(k−1) + k·flux`` (``jnp.pad
+    mode='symmetric'`` plus a linear ramp; zero-flux insulation by
+    default).  Ghost-pinning execution like periodic/reflect; the
+    one-fill-per-sweep chain is exact for mirror-symmetric taps at zero
+    flux (any depth), and for any taps/flux at ``t = 1`` (ghosts
+    re-pinned every step).  Other depth/tap combinations are refused at
+    compile time with the fixes spelled out (``taps.check_boundary``).
 
 Because the padded layout is only closed under *zero Dirichlet*, the
 multi-sweep executor re-pins the ghost halo once per sweep for
@@ -45,12 +54,13 @@ import dataclasses
 
 from repro.kernels.taps import check_boundary
 
-KINDS = ("dirichlet", "periodic", "reflect")
+KINDS = ("dirichlet", "periodic", "reflect", "neumann")
 
 
 @dataclasses.dataclass(frozen=True)
 class Boundary:
-    """A boundary condition: ``kind`` ∈ {dirichlet, periodic, reflect}.
+    """A boundary condition: ``kind`` ∈ {dirichlet, periodic, reflect,
+    neumann}.
 
     Immutable and hashable — it is part of every program/runner cache key
     and is passed to the jitted kernels as a static argument.
@@ -68,7 +78,7 @@ class Boundary:
         if self.kind not in KINDS:
             raise ValueError(f"unknown boundary kind {self.kind!r}; "
                              f"expected one of {KINDS}")
-        if self.kind != "dirichlet" and self.value != 0.0:
+        if self.kind in ("periodic", "reflect") and self.value != 0.0:
             raise ValueError(f"{self.kind} boundary takes no value")
 
     # ----------------------------------------------------- constructors ----
@@ -87,6 +97,13 @@ class Boundary:
         """Mirror boundary: ``ghost(-k) = u(k)`` about the edge cell."""
         return Boundary("reflect")
 
+    @staticmethod
+    def neumann(flux: float = 0.0) -> "Boundary":
+        """Flux boundary: outward normal derivative = ``flux`` at every
+        face (``ghost(-k) = u(k-1) + k·flux``; zero-flux insulation by
+        default).  ``value`` stores the flux."""
+        return Boundary("neumann", float(flux))
+
     # ------------------------------------------------------- predicates ----
     @property
     def is_zero_dirichlet(self) -> bool:
@@ -102,6 +119,8 @@ class Boundary:
     def __repr__(self) -> str:  # compact, key-friendly
         if self.kind == "dirichlet":
             return f"Boundary.dirichlet({self.value:g})"
+        if self.kind == "neumann" and self.value != 0.0:
+            return f"Boundary.neumann({self.value:g})"
         return f"Boundary.{self.kind}()"
 
 

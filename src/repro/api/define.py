@@ -158,12 +158,20 @@ def spec_from_json(source) -> StencilSpec:
     ``taps`` is required (or ``"operator": {"kind": "diffusion", ...}``);
     everything else is optional — omitted cost-model fields are derived
     from the tap structure.
+
+    A JSON object with a ``"fields"`` key is a coupled *system* spec and
+    dispatches to :func:`repro.systems.system_from_json`, returning a
+    :class:`~repro.systems.spec.SystemSpec` (compile it with
+    ``repro.systems.compile_system`` — guide: ``docs/systems.md``).
     """
     if isinstance(source, str):
         with open(source) as f:
             obj = json.load(f)
     else:
         obj = dict(source)
+    if "fields" in obj:
+        from repro.systems import system_from_json
+        return system_from_json(obj)
     if "operator" in obj:
         op = dict(obj["operator"])
         if "kind" not in op:

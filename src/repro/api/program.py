@@ -321,14 +321,25 @@ def _budget(hw: rl.HardwareModel) -> float:
 
 
 def _sweep_tile_2d(spec: StencilSpec, t: int, shape: tuple[int, int],
-                   hw: rl.HardwareModel, plan: EbisuPlan) -> int:
+                   hw: rl.HardwareModel, plan: EbisuPlan,
+                   interpret: bool = False) -> int:
     """Widest strip the §6 VMEM model affords (§6.4: wider before deeper),
-    halving toward the plan's tile when the whole domain does not fit."""
+    halving toward the plan's tile when the whole domain does not fit.
+
+    ``interpret``: skip the widening entirely and keep the plan's own
+    tile.  The §6.4 growth exists to fill real VMEM; the interpreter has
+    none, and growing the strip past the plan's block is a measured
+    superlinear pessimization on single-threaded CPU hosts (the
+    pre-existing ``sweep/j2d5pt-T24`` bench regression — DESIGN.md §17).
+    """
     height, width = shape
     halo = spec.halo(t)
     nbuf = plan.parallelism.num_buffers
-    bh, _ = strip_geometry(spec, t, max(height, halo))
     floor = max(min(plan.block[0], height), halo)
+    if interpret:
+        bh, _ = strip_geometry(spec, t, floor)
+        return bh
+    bh, _ = strip_geometry(spec, t, max(height, halo))
     while (vmem_required_2d(spec, t, bh, width, hw.s_cell, nbuf)
            > _budget(hw) and bh // 2 >= floor):
         bh, _ = strip_geometry(spec, t, bh // 2)
@@ -336,7 +347,8 @@ def _sweep_tile_2d(spec: StencilSpec, t: int, shape: tuple[int, int],
 
 
 def _sweep_tile_3d(spec: StencilSpec, t: int, shape: tuple[int, int, int],
-                   hw: rl.HardwareModel, plan: EbisuPlan
+                   hw: rl.HardwareModel, plan: EbisuPlan,
+                   interpret: bool = False
                    ) -> tuple[int, int | None, int | None, int]:
     """Deepest z chunk — and the streaming batch — the §6 VMEM model
     affords at the plan's xy tile.  The batch is fitted with the
@@ -344,7 +356,10 @@ def _sweep_tile_3d(spec: StencilSpec, t: int, shape: tuple[int, int, int],
     launches a configuration the shared model says does not fit: at the
     plan's own (zc, depth) the planner already proved one exists, and an
     off-plan depth too deep for the budget raises instead of silently
-    over-committing on-chip memory."""
+    over-committing on-chip memory.  ``interpret`` starts from the
+    plan's own chunk instead of the whole domain (see
+    :func:`_sweep_tile_2d` — the VMEM-filling growth is a pessimization
+    where there is no VMEM)."""
     zdim, ydim, xdim = shape
     halo = spec.halo(t)
     nbuf = plan.parallelism.num_buffers
@@ -360,6 +375,8 @@ def _sweep_tile_3d(spec: StencilSpec, t: int, shape: tuple[int, int, int],
 
     zc = _pad_to(max(zdim, halo), halo)
     floor = min(zc, _pad_to(max(min(plan.block[0], zdim), halo), halo))
+    if interpret:
+        zc = floor
     batch = fit_batch(zc)
     while batch is None and zc > floor:
         zc = max(floor, _pad_to(zc // 2, halo))
@@ -379,7 +396,8 @@ def _supports_donation() -> bool:
 def _build_chain(spec: StencilSpec, shape: tuple[int, ...], dtype,
                  total_t: int, depth: int, plan: EbisuPlan,
                  hw: rl.HardwareModel, mode: str, interpret: bool,
-                 boundary: Boundary, compute_dtype=None):
+                 boundary: Boundary, compute_dtype=None,
+                 batched: bool = False):
     """The multi-sweep schedule as an un-jitted f(x) -> x (DESIGN.md §9.3).
 
     Zero Dirichlet: the zero-copy padded chain — pad once per depth
@@ -398,7 +416,12 @@ def _build_chain(spec: StencilSpec, shape: tuple[int, ...], dtype,
     """
     groups = _grouped(sweep_schedule(total_t, depth))
     nbuf = plan.parallelism.num_buffers
-    repin = boundary.kind in ("periodic", "reflect")
+    # interpret-mode strip floor (§17): the plan's own tile beats grown
+    # strips on a single-threaded host — EXCEPT under vmap, where the
+    # per-strip mask machinery is multiplied by the batch width and the
+    # grown strip measures faster; batched chains keep the §6.4 growth
+    tile_interp = interpret and not batched
+    repin = boundary.kind in ("periodic", "reflect", "neumann")
     cdtype = jnp.dtype(compute_dtype) if compute_dtype else jnp.float32
     s = tap_sum(spec.taps)
     # per-sweep affine re-shift (s != 1): shift inside the sweep loop;
@@ -428,7 +451,7 @@ def _build_chain(spec: StencilSpec, shape: tuple[int, ...], dtype,
         def ext(d: int) -> tuple[int, int]:
             return height + 2 * halo_of(d), width + 2 * halo_of(d)
 
-        cfg = {d: (_sweep_tile_2d(spec, d, ext(d), hw, plan),)
+        cfg = {d: (_sweep_tile_2d(spec, d, ext(d), hw, plan, tile_interp),)
                for d, _ in groups}
 
         def chain(v: jnp.ndarray) -> jnp.ndarray:
@@ -470,7 +493,7 @@ def _build_chain(spec: StencilSpec, shape: tuple[int, ...], dtype,
             h = halo_of(d)
             return zdim + 2 * h, ydim + 2 * h, xdim + 2 * h
 
-        cfg = {d: _sweep_tile_3d(spec, d, ext3(d), hw, plan)
+        cfg = {d: _sweep_tile_3d(spec, d, ext3(d), hw, plan, tile_interp)
                for d, _ in groups}
 
         def chain(v: jnp.ndarray) -> jnp.ndarray:
@@ -626,7 +649,7 @@ class StencilProgram:
                 compute_dtype=self.compute_dtype)))
         return fn(x)
 
-    def _run_fn(self, total_t: int):
+    def _run_fn(self, total_t: int, batched: bool = False):
         plan = self.plan or plan_bucketed(self.spec, self.shape, self.hw)
         depth = max(1, min(self.t, total_t))
         if self.spec.ndim == 2 and self.mode not in ("fused", "scratch"):
@@ -636,7 +659,8 @@ class StencilProgram:
         return _build_chain(self.spec, self.shape, self.dtype, total_t,
                             depth, plan, self.hw, self.mode,
                             self.interpret, self.boundary,
-                            compute_dtype=self.compute_dtype)
+                            compute_dtype=self.compute_dtype,
+                            batched=batched)
 
     def run(self, x: jnp.ndarray, total_t: int) -> jnp.ndarray:
         """``total_t`` steps as chained temporally-blocked sweeps under a
@@ -670,7 +694,7 @@ class StencilProgram:
             return xs
         fn = RUNNER_CACHE.get_or_build(
             (self._key, "batched", total_t),
-            lambda: jax.jit(jax.vmap(self._run_fn(total_t))))
+            lambda: jax.jit(jax.vmap(self._run_fn(total_t, batched=True))))
         return fn(xs)
 
     def run_sharded(self, x: jnp.ndarray, total_t: int) -> jnp.ndarray:
@@ -796,7 +820,7 @@ class StencilProgram:
         """The domain the kernels actually compute: the program shape,
         ghost-extended by ``t·rad`` per side for re-pinning boundaries."""
         depth = self.t if t is None else t
-        if self.boundary.kind in ("periodic", "reflect"):
+        if self.boundary.kind in ("periodic", "reflect", "neumann"):
             h = self.spec.halo(depth)
             return tuple(n + 2 * h for n in self.shape)
         return self.shape

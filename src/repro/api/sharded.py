@@ -35,7 +35,7 @@ Execution of one temporal block of depth ``d`` (DESIGN.md §12):
 The per-shard compute is the jnp tap-engine chain (the same numerical
 core the Pallas kernels and the oracle share, DESIGN.md §8.3); driving
 the Pallas kernels *inside* shard_map needs a per-shard scalar-prefetch
-origin operand and stays a recorded stretch item (DESIGN.md §15).
+origin operand and stays a recorded stretch item (DESIGN.md §17).
 
 Everything here is importable without initializing a JAX backend; device
 questions are answered when ``compile_stencil(..., mesh=)`` resolves the
@@ -136,8 +136,16 @@ def validate_mesh_for(spec: StencilSpec, shape: tuple[int, ...],
       * the block halo ``t·radius`` must fit inside one neighbor shard
         (halo slabs travel exactly one ppermute hop per block);
       * reflect additionally mirrors ``t·radius`` interior cells about
-        the edge *excluding* the edge cell, needing one extra row.
+        the edge *excluding* the edge cell, needing one extra row;
+      * neumann is not wired into the shard-local edge fills yet —
+        refused up front rather than KeyError-ing mid-compile.
     """
+    if getattr(boundary, "kind", None) == "neumann":
+        raise ValueError(
+            f"{spec.name}: run_sharded does not support neumann boundaries "
+            "yet (the shard-local edge ghost fill only implements "
+            "dirichlet/periodic/reflect); use one of those, or run the "
+            "program single-device where neumann is fully supported")
     dims = _mesh_dims(mesh)
     h = spec.halo(t)
     for d, n in enumerate(dims):

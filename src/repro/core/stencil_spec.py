@@ -154,13 +154,17 @@ def derive_cost_model(taps, ndim: int) -> dict:
 
 
 # ============================================================ validation ===
-def validate_taps(taps) -> tuple[int, int]:
+def validate_taps(taps, *, min_radius: int = 1) -> tuple[int, int]:
     """Validate a raw tap set; returns ``(ndim, radius)``.
 
     Raises ``ValueError`` with a precise message naming the offending tap
     for: empty sets, non-integer or mixed-arity offsets, unsupported
     dimensionality, duplicate offsets, non-finite or zero coefficients,
-    and radii outside ``[1, MAX_RADIUS]``.
+    and radii outside ``[min_radius, MAX_RADIUS]``.  Single-field specs
+    keep the default ``min_radius=1`` (a pure center tap has nothing to
+    temporally block); coupled systems pass ``min_radius=0`` because an
+    identity-only coupling (e.g. a reaction partner's pointwise feed) is
+    legitimate — the *system* radius still has to clear 1.
     """
     taps = tuple(taps)
     if not taps:
@@ -201,7 +205,7 @@ def validate_taps(taps) -> tuple[int, int]:
                 "inflate the derived cost model without contributing")
         seen[off] = float(c)
     radius = taps_radius(taps)
-    if radius < 1:
+    if radius < min_radius:
         raise ValueError(
             "stencil radius is 0 (only the center tap?); temporal blocking "
             "needs at least one neighbor tap (radius >= 1)")

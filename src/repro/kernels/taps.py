@@ -300,8 +300,42 @@ def check_boundary(taps: Taps, boundary, t: int | None = None) -> None:
     * reflect needs per-axis mirror symmetry of the tap set: only then is
       the mirror extension preserved by evolution, making the one-time
       deep-halo ghost fill equivalent to re-mirroring every step.
+    * neumann(flux) fills ghosts by the face-mirror ``ghost(-k) = u(k-1)
+      + k·flux`` (zero normal derivative for flux = 0).  A depth-1 chain
+      refills the ghosts every step — exact for ANY taps and any flux.
+      Deeper fused chains fill once per sweep, which is exact only when
+      the tap set is mirror-symmetric per axis (so the symmetric
+      extension evolves as the mirror of the interior) AND ``flux == 0``
+      (one step moves a kinked flux ramp off the ``ghost(-k) = u(k-1) +
+      k·flux`` relation by ``-a·flux`` at the face for arm weight ``a``
+      — no tap sum fixes it), so other combinations are refused with the
+      fixes spelled out.
     """
     if is_zero_dirichlet(boundary) or boundary.kind == "periodic":
+        return
+    if boundary.kind == "neumann":
+        if t == 1:
+            return                    # ghosts refilled per step: exact
+        mirror = _mirror_defect(taps)
+        if mirror is not None:
+            off, c, a = mirror
+            raise ValueError(
+                f"neumann boundary at chain depth "
+                f"t={'unknown' if t is None else t} needs a "
+                f"mirror-symmetric tap set (the one-fill-per-sweep "
+                f"symmetric extension must evolve as the mirror of the "
+                f"interior); tap {off} (coeff {c:g}) has no axis-{a} "
+                "mirror.  Fix: compile with t=1 (ghosts re-pinned every "
+                "step, exact for any taps), or symmetrize the taps")
+        if boundary.value != 0.0:
+            raise ValueError(
+                f"neumann(flux={boundary.value:g}) with a fused chain "
+                f"t={'unknown' if t is None else t} steps deep: the "
+                "constant-flux ghost ramp is only consistent under "
+                "per-step refills (one stencil application bends the "
+                "ramp at the face).  Fix: compile with t=1, or use "
+                "neumann() with zero flux, which is exact at any depth "
+                "for mirror-symmetric taps")
         return
     if boundary.kind == "dirichlet":
         s = tap_sum(taps)
@@ -317,26 +351,59 @@ def check_boundary(taps: Taps, boundary, t: int | None = None) -> None:
                 "dirichlet(0)/periodic, which are exact for any tap sum")
         return
     if boundary.kind == "reflect":
-        coeff = dict(taps)
-        for off, c in taps:
-            for a in range(len(off)):
-                m = tuple(-o if i == a else o for i, o in enumerate(off))
-                if abs(coeff.get(m, 0.0) - c) > 1e-9:
-                    raise ValueError(
-                        f"reflect boundary needs a mirror-symmetric tap set; "
-                        f"tap {off} (coeff {c:g}) has no axis-{a} mirror")
+        mirror = _mirror_defect(taps)
+        if mirror is not None:
+            off, c, a = mirror
+            raise ValueError(
+                f"reflect boundary needs a mirror-symmetric tap set; "
+                f"tap {off} (coeff {c:g}) has no axis-{a} mirror")
         return
     raise ValueError(f"unknown boundary kind {boundary.kind!r}")
+
+
+def _mirror_defect(taps: Taps):
+    """First tap breaking per-axis mirror symmetry as ``(off, coeff,
+    axis)``, or ``None`` for a symmetric set (reflect/neumann need this
+    symmetry for one-fill-per-sweep ghost pinning)."""
+    coeff = dict(taps)
+    for off, c in taps:
+        for a in range(len(off)):
+            m = tuple(-o if i == a else o for i, o in enumerate(off))
+            if abs(coeff.get(m, 0.0) - c) > 1e-9:
+                return off, c, a
+    return None
 
 
 def ghost_extend(x: jnp.ndarray, ndim: int, halo: int,
                  boundary) -> jnp.ndarray:
     """Extend the last ``ndim`` axes of ``x`` by ``halo`` ghost cells per
-    side, filled by the boundary rule (constant / wrap / mirror).  Leading
-    axes (e.g. a batch) pass through unpadded."""
+    side, filled by the boundary rule (constant / wrap / mirror /
+    flux-mirror).  Leading axes (e.g. a batch) pass through unpadded.
+
+    neumann(flux): the face-mirror ``ghost(-k) = u(k-1) + k·flux`` per
+    axis — ``jnp.pad mode='symmetric'`` plus a linear ramp of slope
+    ``flux`` over the ghost distance, so the outward normal derivative
+    at every domain face is ``flux`` (zero-flux insulation for the
+    default 0).  Corners add the per-axis ramps (the separable
+    convention the oracle tests pin down)."""
     pad = [(0, 0)] * (x.ndim - ndim) + [(halo, halo)] * ndim
     if boundary.kind == "dirichlet":
         return jnp.pad(x, pad, constant_values=boundary.value)
+    if boundary.kind == "neumann":
+        xe = jnp.pad(x, pad, mode="symmetric")
+        if boundary.value != 0.0:
+            for a in range(ndim):
+                axis = x.ndim - ndim + a
+                i = jnp.arange(xe.shape[axis])
+                n = x.shape[axis]
+                dist = jnp.maximum(jnp.maximum(halo - i, i - (halo + n - 1)),
+                                   0)
+                shape = [1] * xe.ndim
+                shape[axis] = xe.shape[axis]
+                xe = xe + (dist.astype(xe.dtype)
+                           * jnp.asarray(boundary.value, xe.dtype)
+                           ).reshape(shape)
+        return xe
     mode = {"periodic": "wrap", "reflect": "reflect"}[boundary.kind]
     return jnp.pad(x, pad, mode=mode)
 

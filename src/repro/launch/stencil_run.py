@@ -49,7 +49,8 @@ def parse_mesh(text: str) -> tuple[int, ...]:
 
 
 def parse_boundary(text: str) -> Boundary:
-    """'dirichlet[:v]' | 'periodic' | 'reflect' → Boundary."""
+    """'dirichlet[:v]' | 'periodic' | 'reflect' | 'neumann[:flux]'
+    → Boundary."""
     kind, _, val = text.partition(":")
     if kind == "dirichlet":
         return Boundary.dirichlet(float(val) if val else 0.0)
@@ -57,8 +58,11 @@ def parse_boundary(text: str) -> Boundary:
         return Boundary.periodic()
     if kind == "reflect":
         return Boundary.reflect()
+    if kind == "neumann":
+        return Boundary.neumann(float(val) if val else 0.0)
     raise argparse.ArgumentTypeError(
-        f"unknown boundary {text!r}; use dirichlet[:v] | periodic | reflect")
+        f"unknown boundary {text!r}; use dirichlet[:v] | periodic | "
+        f"reflect | neumann[:flux]")
 
 
 def cost_summary_line(spec: StencilSpec,
@@ -233,6 +237,48 @@ def run_campaign_cli(spec: StencilSpec | str, *, checkpoint_dir: str,
     return rep
 
 
+def run_system_cli(name: str, *, t: int | None = None, scale: int = 64,
+                   boundary: Boundary | None = None,
+                   total_t: int | None = None, check: bool = True):
+    """Drive a coupled system end-to-end (``docs/systems.md``): compile
+    the library system, run ``T`` steps as fused multi-field sweeps, and
+    (optionally) check the result is finite and matches the unfused
+    per-field-per-step lockstep reference.
+
+        python -m repro.launch.stencil_run --system gray-scott --t 4
+    """
+    import numpy as np
+
+    from repro.systems import compile_system, get_system
+
+    spec = get_system(name)
+    boundary = boundary or Boundary.periodic()
+    shape = (scale, scale)[:spec.ndim] if spec.ndim == 2 else \
+        (scale, scale, scale)
+    prog = compile_system(spec, shape, t=t or 4, boundary=boundary)
+    total = total_t if total_t is not None else 2 * prog.t + 1
+    rng = np.random.default_rng(0)
+    fields = {f: jnp.asarray(rng.uniform(0.2, 0.8, shape).astype(np.float32))
+              for f in spec.fields}
+    t0 = time.time()
+    out = prog.run(fields, total)
+    jax.block_until_ready(out)
+    dt = time.time() - t0
+    line = (f"[system]  {spec.name:20s} fields={len(spec.fields)} "
+            f"domain={shape} T={total} t={prog.t} "
+            f"boundary={boundary!r} {dt*1e3:.0f}ms")
+    if check:
+        assert all(bool(jnp.isfinite(v).all()) for v in out.values()), \
+            f"{spec.name}: non-finite output"
+        want = prog.run_lockstep(fields, total)
+        err = max(float(jnp.abs(out[f] - want[f]).max())
+                  for f in spec.fields)
+        line += f" maxerr_vs_lockstep={err:.2e}"
+        assert err < 2e-5
+    print(line, flush=True)
+    return out
+
+
 def run_distributed(name: str, *, t_total: int = 4, t_block: int = 2,
                     scale: int = 64):
     # lazy: the mesh helpers need jax.sharding.AxisType (newer jax); the
@@ -298,10 +344,14 @@ def main():
                     help="rescale --taps coefficients to sum to 1")
     ap.add_argument("--name", default=None,
                     help="name for the --taps stencil")
+    ap.add_argument("--system", default=None, metavar="NAME",
+                    help="run a coupled multi-field system (gray-scott | "
+                         "fdtd-acoustic | advection-diffusion) — "
+                         "docs/systems.md")
     ap.add_argument("--t", type=int, default=None)
     ap.add_argument("--scale", type=int, default=64)
     ap.add_argument("--boundary", type=parse_boundary, default=None,
-                    metavar="dirichlet[:v]|periodic|reflect",
+                    metavar="dirichlet[:v]|periodic|reflect|neumann[:flux]",
                     help="boundary condition (default zero Dirichlet)")
     ap.add_argument("--mesh", type=parse_mesh, default=None,
                     metavar="N|ZxY",
@@ -344,6 +394,14 @@ def main():
 
         from repro.launch.mesh import ensure_fake_devices
         ensure_fake_devices(math.prod(args.mesh))
+    if args.system:
+        if args.taps or args.spec_json or args.mesh or args.distributed \
+                or args.checkpoint_dir:
+            ap.error("--system runs single-device fused system programs; "
+                     "it composes with --t/--T/--scale/--boundary only")
+        run_system_cli(args.system, t=args.t, scale=args.scale,
+                       boundary=args.boundary, total_t=args.total_t)
+        return
     if args.taps or args.spec_json:
         if args.distributed:
             ap.error("--distributed drives the Table-2 suite; custom specs "

@@ -1,0 +1,46 @@
+"""Coupled multi-field stencil systems with fused temporal blocking.
+
+    from repro.api import Boundary
+    from repro.systems import compile_system, define_system, get_system
+
+    prog = compile_system(get_system("gray-scott"), (256, 256), t=4,
+                          boundary=Boundary.periodic())
+    out = prog.run({"u": u0, "v": v0}, T=64)   # 16 fused multi-field sweeps
+
+A system is named fields + per-pair linear couplings + an optional
+registered pointwise reaction (``repro.systems.reactions``); the
+executor advances all fields inside ONE fused trapezoid-chained program,
+so temporal blocking spans the coupling (guide: ``docs/systems.md``,
+contract: DESIGN.md §16).  Importing this package never initializes a
+JAX backend.
+"""
+from repro.systems.library import (SYSTEMS, advection_diffusion,
+                                   fdtd_acoustic, get_system, gray_scott,
+                                   system_names)
+from repro.systems.program import (SystemProgram, clear_system_caches,
+                                   compile_system, system_cache_stats,
+                                   system_step)
+from repro.systems.reactions import (REACTIONS, Reaction, register_reaction)
+from repro.systems.spec import (SystemSpec, define_system, system_from_json,
+                                system_to_json)
+
+__all__ = [
+    "REACTIONS",
+    "Reaction",
+    "SYSTEMS",
+    "SystemProgram",
+    "SystemSpec",
+    "advection_diffusion",
+    "clear_system_caches",
+    "compile_system",
+    "define_system",
+    "fdtd_acoustic",
+    "get_system",
+    "gray_scott",
+    "register_reaction",
+    "system_cache_stats",
+    "system_from_json",
+    "system_names",
+    "system_step",
+    "system_to_json",
+]

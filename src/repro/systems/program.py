@@ -1,0 +1,307 @@
+"""``SystemProgram``: one fused trapezoid chain across the coupling.
+
+The single-field executor's pitch — plan once, then drive deep temporal
+blocking — generalizes to coupled systems by making the *system step* the
+unit the trapezoid narrows: each temporal step applies every coupling
+(valid-mode, cropping by the **system** radius) and then the pointwise
+reaction, so all fields advance inside one fused jitted program and
+temporal blocking spans the coupling instead of syncing per field per
+step (the multi-field ``chain_trapezoid``):
+
+    from repro.systems import compile_system, gray_scott
+    prog = compile_system(gray_scott(), (256, 256), t=4,
+                          boundary=Boundary.periodic())
+    out = prog.run({"u": u0, "v": v0}, T=64)     # 16 fused sweeps
+
+Boundary execution (DESIGN.md §16): **periodic** hoists the ghost fill —
+every field is wrap-extended once by ``t·radius`` per sweep and the chain
+narrows all fields by one radius per step (true deep blocking: halo
+traffic amortized over ``t`` steps).  Every other kind (dirichlet of any
+value, neumann of any flux, reflect) re-pins a one-radius ghost ring
+**every step inside the same fused jit** — exact for arbitrary taps,
+values and fluxes, which is why ``compile_system`` needs none of the
+single-field path's closure refusals: the single-field reductions exist
+to preserve the *zero-copy padded layout*, which the multi-field
+executor does not use.
+
+``run_lockstep`` is the deliberately-unfused reference: one separately
+jitted dispatch per field per step (``T·n_fields`` dispatches) — the
+baseline the ``systems/`` bench family measures the fused chain against,
+and the equivalence target of the test suite.
+
+All state lives in bounded :class:`~repro.api.program.ProgramCache`
+instances; importing this module never initializes a JAX backend.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.boundary import ZERO, Boundary
+from repro.api.program import (ProgramCache, _grouped,
+                               resolve_compute_dtype, sweep_schedule)
+from repro.kernels.taps import engine_for, ghost_extend
+from repro.systems.reactions import resolve_reaction
+from repro.systems.spec import SystemSpec
+
+SYSTEM_PROGRAM_CACHE = ProgramCache(32, "system_programs")
+SYSTEM_RUNNER_CACHE = ProgramCache(64, "system_runners")
+
+
+def system_cache_stats() -> dict:
+    """Hit/miss/size counters of the systems caches.
+
+        from repro.systems import system_cache_stats
+        system_cache_stats()["system_programs"]["hits"]
+    """
+    return {c.name: c.stats()
+            for c in (SYSTEM_PROGRAM_CACHE, SYSTEM_RUNNER_CACHE)}
+
+
+def clear_system_caches() -> None:
+    for c in (SYSTEM_PROGRAM_CACHE, SYSTEM_RUNNER_CACHE):
+        c.clear()
+
+
+# ========================================================== the system step ==
+def system_step(spec: SystemSpec, ext: dict, reaction_fn) -> dict:
+    """One temporal step on ghost-extended fields, valid-mode.
+
+    ``ext[f]`` carries at least one system-radius ring of context beyond
+    the cells being produced; every coupling is applied with
+    ``crops = radius`` (smaller-radius pairs still crop by the *system*
+    radius — the tap engine's valid mode allows crop > tap reach), the
+    per-destination terms are summed, and the reaction reads the
+    pre-step values center-cropped to the output extent.  Every field
+    shrinks by one system radius per side.
+    """
+    ndim, rad = spec.ndim, spec.radius
+    crops = (rad,) * ndim
+    lin: dict = {}
+    for (dst, src), taps in spec.couplings:
+        term = engine_for(taps, ndim).step(ext[src], crops=crops)
+        lin[dst] = term if dst not in lin else lin[dst] + term
+    if reaction_fn is None:
+        return lin
+    c = (Ellipsis,) + (slice(rad, -rad),) * ndim
+    new = reaction_fn(lin, {f: ext[f][c] for f in spec.fields})
+    missing = [f for f in spec.fields if f not in new]
+    if missing:
+        raise ValueError(
+            f"reaction {spec.reaction!r} returned no value for field(s) "
+            f"{missing}; a reaction must map (lin, prev) to every field")
+    return {f: new[f] for f in spec.fields}
+
+
+def _build_system_chain(spec: SystemSpec, shape, dtype, cdtype,
+                        total_t: int, depth: int, boundary: Boundary):
+    """The multi-sweep system schedule as an un-jitted f(fields) ->
+    fields (the multi-field §9.3 executor)."""
+    groups = _grouped(sweep_schedule(total_t, depth))
+    ndim, rad = spec.ndim, spec.radius
+    reaction_fn = resolve_reaction(spec.reaction)
+    hoist = boundary.kind == "periodic"
+
+    def sweep(cur: dict, d: int) -> dict:
+        if hoist:
+            # wrap-extend once per sweep by d·rad, narrow d times: the
+            # ghost ring evolves exactly like the wrapped interior, so
+            # the fill is hoisted out of the step loop (deep blocking)
+            ext = {f: ghost_extend(cur[f], ndim, d * rad, boundary)
+                   for f in spec.fields}
+            for _ in range(d):
+                ext = system_step(spec, ext, reaction_fn)
+            return ext
+        # dirichlet/neumann/reflect: the true boundary values depend on
+        # the *evolved* field, so re-pin one ghost ring every step —
+        # exact for any taps/value/flux, still one fused dispatch
+        for _ in range(d):
+            ext = {f: ghost_extend(cur[f], ndim, rad, boundary)
+                   for f in spec.fields}
+            cur = system_step(spec, ext, reaction_fn)
+        return cur
+
+    def run(fields: dict) -> dict:
+        cur = {f: fields[f].astype(cdtype) for f in spec.fields}
+        for d, count in groups:
+            for _ in range(count):
+                cur = sweep(cur, d)
+        return {f: cur[f].astype(dtype) for f in spec.fields}
+
+    return run
+
+
+# ============================================================== programs ==
+class SystemProgram:
+    """An immutable compiled system: spec + domain shape + depth +
+    boundary, with memoized jitted runners.  Construct via
+    :func:`compile_system`:
+
+        prog = compile_system(gray_scott(), (256, 256), t=4)
+        out  = prog.apply(fields)          # one fused t-deep sweep
+        out  = prog.run(fields, 64)        # 64 steps, chained sweeps
+        outs = prog.run_batched(stacked, 64)
+        ref  = prog.run_lockstep(fields, 64)   # unfused reference
+    """
+
+    def __init__(self, key, spec: SystemSpec, shape, dtype, t: int,
+                 boundary: Boundary, compute_dtype):
+        self._key = key
+        self.spec = spec
+        self.shape = shape
+        self.dtype = dtype
+        self.t = t
+        self.boundary = boundary
+        self.compute_dtype = compute_dtype
+
+    # ------------------------------------------------------- execution ----
+    def _check(self, fields: dict, batched: bool = False):
+        if set(fields) != set(self.spec.fields):
+            raise ValueError(
+                f"system {self.spec.name} has fields "
+                f"{list(self.spec.fields)}; got {sorted(fields)}")
+        want = self.shape
+        for f in self.spec.fields:
+            got = tuple(fields[f].shape)
+            body = got[1:] if batched else got
+            if body != want:
+                raise ValueError(
+                    f"field {f!r} has shape {got}, but the program is "
+                    f"compiled for {'batched ' if batched else ''}domain "
+                    f"{want}; every field shares one domain — "
+                    "compile_system a new program for a new shape")
+
+    def _run_fn(self, total_t: int, depth: int | None = None):
+        return _build_system_chain(
+            self.spec, self.shape, self.dtype, self.compute_dtype,
+            total_t, depth or max(1, min(self.t, total_t)), self.boundary)
+
+    def apply(self, fields: dict, t: int | None = None) -> dict:
+        """One fused sweep of depth ``t`` (default: the compiled depth)."""
+        self._check(fields)
+        depth = self.t if t is None else t
+        if depth < 1:
+            raise ValueError(f"temporal depth must be >= 1, got {depth} "
+                             "(run(fields, 0) is the identity)")
+        fn = SYSTEM_RUNNER_CACHE.get_or_build(
+            (self._key, "apply", depth),
+            lambda: jax.jit(self._run_fn(depth, depth)))
+        return fn(fields)
+
+    def run(self, fields: dict, total_t: int) -> dict:
+        """``total_t`` steps as chained fused sweeps under one cached jit
+        (remainder sweep included when ``t`` does not divide it)."""
+        self._check(fields)
+        if total_t == 0:
+            return dict(fields)
+        fn = SYSTEM_RUNNER_CACHE.get_or_build(
+            (self._key, "run", total_t),
+            lambda: jax.jit(self._run_fn(total_t)))
+        return fn(fields)
+
+    def run_batched(self, fields: dict, total_t: int | None = None) -> dict:
+        """A leading batch axis on every field through ONE vmapped
+        runner — a single jitted dispatch for the whole batch."""
+        self._check(fields, batched=True)
+        total_t = self.t if total_t is None else total_t
+        if total_t == 0:
+            return dict(fields)
+        fn = SYSTEM_RUNNER_CACHE.get_or_build(
+            (self._key, "batched", total_t),
+            lambda: jax.jit(jax.vmap(self._run_fn(total_t))))
+        return fn(fields)
+
+    def run_lockstep(self, fields: dict, total_t: int) -> dict:
+        """The unfused per-field-per-step reference: every step, each
+        field's update is one separately jitted dispatch (``T·n_fields``
+        dispatches, ghost ring re-pinned per step for every boundary) —
+        the classic sync-per-field-per-step scheme the fused chain is
+        benchmarked against, and numerically the same trajectory."""
+        self._check(fields)
+        cur = {f: fields[f].astype(self.compute_dtype)
+               for f in self.spec.fields}
+        for _ in range(total_t):
+            cur = {f: self._lockstep_fn(f)(cur) for f in self.spec.fields}
+        return {f: cur[f].astype(self.dtype) for f in self.spec.fields}
+
+    def _lockstep_fn(self, dst: str):
+        spec, boundary = self.spec, self.boundary
+        reaction_fn = resolve_reaction(spec.reaction)
+
+        def one(cur: dict):
+            ext = {f: ghost_extend(cur[f], spec.ndim, spec.radius, boundary)
+                   for f in spec.fields}
+            return system_step(spec, ext, reaction_fn)[dst]
+
+        return SYSTEM_RUNNER_CACHE.get_or_build(
+            (self._key, "lockstep", dst), lambda: jax.jit(one))
+
+    # ---------------------------------------------------- introspection ----
+    def cost(self) -> dict:
+        """The generalized §5 counting model for one step of the whole
+        system over this domain: per-field and total flops, and the
+        perfect-caching HBM bytes (``a_gm = 2·n_fields`` cells of the
+        compute dtype per cell position)."""
+        cells = math.prod(self.shape)
+        per_field = self.spec.per_field_flops()
+        return {
+            "per_field_flops_per_cell": per_field,
+            "flops_per_cell": self.spec.flops_per_cell,
+            "flops_per_step": self.spec.flops_per_cell * cells,
+            "hbm_bytes_per_step": (self.spec.a_gm * cells
+                                   * self.compute_dtype.itemsize),
+            "halo": self.spec.halo(self.t),
+        }
+
+    def cache_stats(self) -> dict:
+        return system_cache_stats()
+
+    def __repr__(self) -> str:
+        return (f"SystemProgram({self.spec.name}, "
+                f"fields={list(self.spec.fields)}, shape={self.shape}, "
+                f"t={self.t}, boundary={self.boundary!r}, "
+                f"dtype={self.dtype.name}/{self.compute_dtype.name})")
+
+
+def compile_system(spec: SystemSpec, shape, *, t: int = 1,
+                   dtype=jnp.float32, boundary: Boundary | None = None,
+                   compute_dtype=None) -> SystemProgram:
+    """Compile a :class:`~repro.systems.spec.SystemSpec` to an immutable
+    :class:`SystemProgram` (memoized on the system *signature* — two
+    structurally identical systems share one program regardless of name).
+
+        from repro.systems import compile_system, get_system
+        prog = compile_system(get_system("gray-scott"), (256, 256), t=4,
+                              boundary=Boundary.neumann())
+        out = prog.run({"u": u0, "v": v0}, 64)
+
+    ``t`` is the fused sweep depth (there is no §6 planner for systems
+    yet — DESIGN.md §16 records the default of 1 as explicit).  All four
+    boundary kinds run exactly at any depth: periodic through the
+    hoisted deep-halo trapezoid, the rest through per-step ghost
+    re-pinning inside the fused chain — no closure refusals apply.
+    """
+    shape = tuple(int(n) for n in shape)
+    if len(shape) != spec.ndim:
+        raise ValueError(
+            f"system {spec.name} is {spec.ndim}-D; got shape {shape}")
+    if any(n < 2 * spec.radius + 2 for n in shape):
+        raise ValueError(
+            f"{spec.name}: domain {shape} has an extent smaller than "
+            f"2·radius+2 = {2 * spec.radius + 2}; the halo would cover it")
+    if t < 1:
+        raise ValueError(f"temporal depth must be >= 1, got {t}")
+    boundary = ZERO if boundary is None else boundary
+    cdtype = resolve_compute_dtype(dtype, compute_dtype)
+    resolve_reaction(spec.reaction)     # fail at compile, not at trace
+    key = (spec.signature, shape, jnp.dtype(dtype).name, int(t),
+           boundary, cdtype.name)
+    cached = SYSTEM_PROGRAM_CACHE.get(key)
+    if cached is not None:
+        return cached
+    prog = SystemProgram(key, spec, shape, jnp.dtype(dtype), int(t),
+                         boundary, cdtype)
+    SYSTEM_PROGRAM_CACHE.put(key, prog)
+    return prog

@@ -18,7 +18,7 @@ from repro.stencils.data import init_domain
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ALL_SPECS = list(TABLE2.values())
 BOUNDARIES = [Boundary.periodic(), Boundary.reflect(),
-              Boundary.dirichlet(0.7)]
+              Boundary.dirichlet(0.7), Boundary.neumann()]
 
 
 def small_shape(spec):
@@ -26,8 +26,22 @@ def small_shape(spec):
 
 
 # ------------------------------------------------ independent oracle -------
-# Deliberately NOT the tap engine: periodic via jnp.roll, dirichlet/reflect
-# via a jnp.pad ghost ring and hand-written tap slices.
+# Deliberately NOT the tap engine: periodic via jnp.roll, the rest via a
+# jnp.pad ghost ring and hand-written tap slices (neumann = per-step
+# symmetric fill ghost(-k) = u(k-1) + k·flux, the flux ramp added by hand).
+
+def neumann_pad(x, rad, flux):
+    xe = np.pad(np.asarray(x), rad, mode="symmetric")
+    if flux:
+        for a in range(x.ndim):
+            n = x.shape[a]
+            i = np.arange(xe.shape[a])
+            dist = np.maximum(np.maximum(rad - i, i - (rad + n - 1)), 0)
+            sh = [1] * x.ndim
+            sh[a] = -1
+            xe = xe + (dist * flux).reshape(sh).astype(xe.dtype)
+    return jnp.asarray(xe)
+
 
 def oracle_step(x, spec, b):
     nd = spec.ndim
@@ -40,6 +54,8 @@ def oracle_step(x, spec, b):
     rad = spec.radius
     if b.kind == "dirichlet":
         xe = jnp.pad(x, rad, constant_values=b.value)
+    elif b.kind == "neumann":
+        xe = neumann_pad(x, rad, b.value)
     else:
         xe = jnp.pad(x, rad, mode="reflect")
     acc = jnp.zeros_like(x)
@@ -132,6 +148,44 @@ def test_boundary_validation_errors():
     for b in (None, Boundary.periodic()):
         compile_stencil(asym, (16, 16), t=2, boundary=b,
                         interpret=True).apply(x)
+
+
+def test_neumann_flux_and_refusals():
+    """Constant-flux neumann is exact for t=1 sweeps (ghosts re-pinned
+    every step, any taps); deeper fused chains are refused unless the
+    taps are mirror-symmetric AND the flux is zero — with the fixes
+    spelled out (taps.check_boundary)."""
+    import dataclasses
+
+    spec = get("j2d5pt")
+    x = init_domain(spec, (22, 19))
+    b = Boundary.neumann(0.5)
+    prog = compile_stencil(spec, x.shape, t=1, boundary=b, interpret=True)
+    got = prog.run(x, 3)
+    want = oracle(x, spec, 3, b)
+    assert float(jnp.abs(got - want).max()) < 1e-4
+    # flux != 0 at depth >= 2: one application bends the ghost ramp
+    with pytest.raises(ValueError, match="per-step refills"):
+        compile_stencil(spec, x.shape, t=2, boundary=b)
+    # mirror-asymmetric taps at depth >= 2: symmetric extension does not
+    # evolve as the mirror of the interior
+    asym = dataclasses.replace(
+        spec, name="asym",
+        taps=(((0, 0), 0.5), ((0, 1), 0.3), ((0, -1), 0.2)))
+    with pytest.raises(ValueError, match="mirror-symmetric"):
+        compile_stencil(asym, x.shape, t=2, boundary=Boundary.neumann())
+    # ...but the same taps are exact at t=1 (per-step refill)
+    p1 = compile_stencil(asym, x.shape, t=1, boundary=Boundary.neumann(),
+                         interpret=True)
+    err = float(jnp.abs(p1.run(x, 3)
+                        - oracle(x, asym, 3, Boundary.neumann())).max())
+    assert err < 1e-4
+    # zero-flux neumann conserves the mean for normalized symmetric taps
+    # (insulated domain): the fused deep chain must too
+    deep = compile_stencil(spec, x.shape, t=4,
+                           boundary=Boundary.neumann(), interpret=True)
+    y = deep.run(x, 8)
+    assert abs(float(y.mean()) - float(x.mean())) < 1e-5
 
 
 # ========================================================== program API ==

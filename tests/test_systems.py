@@ -1,0 +1,252 @@
+"""Coupled multi-field systems: the three shipped systems vs an
+independent per-step numpy oracle across the full boundary × depth
+matrix, fused-chain ≡ lockstep equivalence, signature cache-keying,
+JSON round-trip, and the structural refusals."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.api import Boundary, spec_from_json
+from repro.systems import (SystemSpec, compile_system, define_system,
+                           get_system, system_from_json, system_names,
+                           system_to_json)
+from repro.systems.reactions import resolve_reaction
+
+SHAPE = (28, 24)
+SYSTEM_NAMES = ("gray-scott", "fdtd-acoustic", "advection-diffusion")
+BOUNDARIES = [Boundary.periodic(), Boundary.neumann(),
+              Boundary.dirichlet(0.3)]
+
+IDENT = (((0, 0), 1.0),)
+LAP01 = (((0, 0), 0.6), ((0, 1), 0.1), ((0, -1), 0.1),
+         ((1, 0), 0.1), ((-1, 0), 0.1))
+
+
+def fields_for(spec, shape=SHAPE, seed=0, batch=None):
+    rng = np.random.default_rng(seed)
+    shp = shape if batch is None else (batch,) + shape
+    return {f: jnp.asarray(rng.uniform(0.2, 0.8, shp).astype(np.float32))
+            for f in spec.fields}
+
+
+# ------------------------------------------------ independent oracle -------
+# Deliberately NOT the tap engine or the systems executor: plain numpy
+# pad + slice arithmetic, one boundary fill per step.
+
+def oracle_extend(x, rad, b):
+    x = np.asarray(x)
+    if b.kind == "dirichlet":
+        return np.pad(x, rad, constant_values=b.value)
+    if b.kind == "periodic":
+        return np.pad(x, rad, mode="wrap")
+    if b.kind == "reflect":
+        return np.pad(x, rad, mode="reflect")
+    xe = np.pad(x, rad, mode="symmetric")
+    if b.value:
+        for a in range(x.ndim):
+            n = x.shape[a]
+            i = np.arange(xe.shape[a])
+            dist = np.maximum(np.maximum(rad - i, i - (rad + n - 1)), 0)
+            sh = [1] * x.ndim
+            sh[a] = -1
+            xe = xe + (dist * b.value).reshape(sh)
+    return xe
+
+
+def oracle_step(fields, spec, b):
+    rad = spec.radius
+    shape = next(iter(fields.values())).shape
+    ext = {f: oracle_extend(fields[f], rad, b) for f in spec.fields}
+    lin = {}
+    for (dst, src), taps in spec.couplings:
+        acc = np.zeros(shape)
+        for off, c in taps:
+            sl = tuple(slice(rad + o, rad + o + n)
+                       for o, n in zip(off, shape))
+            acc += c * ext[src][sl]
+        lin[dst] = lin.get(dst, 0.0) + acc
+    if spec.reaction is None:
+        return lin
+    rx = resolve_reaction(spec.reaction)
+    prev = {f: np.asarray(fields[f]) for f in spec.fields}
+    return {f: np.asarray(v) for f, v in rx(lin, prev).items()}
+
+
+def oracle(fields, spec, total_t, b):
+    cur = {f: np.asarray(v, np.float64) for f, v in fields.items()}
+    for _ in range(total_t):
+        cur = oracle_step(cur, spec, b)
+    return cur
+
+
+# ================================================== oracle matrix ==========
+@pytest.mark.parametrize("boundary", BOUNDARIES, ids=lambda b: b.kind)
+@pytest.mark.parametrize("t", [1, 2, 4])
+@pytest.mark.parametrize("name", SYSTEM_NAMES)
+def test_system_matches_oracle(name, t, boundary):
+    """All three shipped systems × t ∈ {1,2,4} × {periodic, neumann,
+    dirichlet}: the fused multi-field chain (remainder sweep included)
+    matches the independent per-step oracle to < 2e-5."""
+    spec = get_system(name)
+    f0 = fields_for(spec)
+    prog = compile_system(spec, SHAPE, t=t, boundary=boundary)
+    total = 2 * t + 1
+    out = prog.run(f0, total)
+    want = oracle(f0, spec, total, boundary)
+    for f in spec.fields:
+        err = float(np.abs(np.asarray(out[f]) - want[f]).max())
+        assert err < 2e-5, (name, f, t, boundary, err)
+
+
+@pytest.mark.parametrize("name", SYSTEM_NAMES)
+def test_fused_chain_equals_lockstep(name):
+    """The fused trapezoid chain ≡ the per-field-per-step lockstep
+    reference — same trajectory, wildly different dispatch count."""
+    spec = get_system(name)
+    f0 = fields_for(spec)
+    for boundary in (Boundary.periodic(), Boundary.neumann()):
+        prog = compile_system(spec, SHAPE, t=4, boundary=boundary)
+        out = prog.run(f0, 8)
+        ref = prog.run_lockstep(f0, 8)
+        for f in spec.fields:
+            np.testing.assert_allclose(
+                np.asarray(out[f]), np.asarray(ref[f]),
+                atol=2e-5, rtol=2e-5, err_msg=f"{name}/{f}/{boundary!r}")
+
+
+def test_apply_and_run_batched():
+    spec = get_system("gray-scott")
+    prog = compile_system(spec, SHAPE, t=3, boundary=Boundary.periodic())
+    f0 = fields_for(spec)
+    # apply == run at the compiled depth
+    a = prog.apply(f0)
+    r = prog.run(f0, 3)
+    for f in spec.fields:
+        np.testing.assert_allclose(np.asarray(a[f]), np.asarray(r[f]),
+                                   atol=1e-6, rtol=1e-6)
+    # one vmapped dispatch == a loop of per-field runs
+    fb = fields_for(spec, batch=3)
+    outs = prog.run_batched(fb, 7)
+    for i in range(3):
+        one = prog.run({f: fb[f][i] for f in spec.fields}, 7)
+        for f in spec.fields:
+            np.testing.assert_allclose(
+                np.asarray(outs[f][i]), np.asarray(one[f]),
+                atol=1e-5, rtol=1e-5, err_msg=f"batch elem {i}/{f}")
+    assert prog.run(f0, 0)["u"] is f0["u"]
+
+
+# ============================================ signature / cache keying =====
+def test_signature_cache_keying():
+    """Programs are memoized on the system *signature*: structurally
+    identical systems share a program regardless of name; any change to
+    couplings, reaction params, depth, or boundary splits the key."""
+    gs = get_system("gray-scott")
+    renamed = SystemSpec(**{**gs.__dict__, "name": "my-gs"})
+    a = compile_system(gs, SHAPE, t=2)
+    assert compile_system(renamed, SHAPE, t=2) is a
+    assert compile_system(gs, SHAPE, t=3) is not a
+    assert compile_system(gs, SHAPE, t=2,
+                          boundary=Boundary.periodic()) is not a
+    tweaked = get_system("gray-scott", F=0.04)
+    assert tweaked.signature != gs.signature
+    assert compile_system(tweaked, SHAPE, t=2) is not a
+    # JSON round-trip preserves the signature, hence the program
+    rt = system_from_json(system_to_json(gs))
+    assert rt.signature == gs.signature
+    assert compile_system(rt, SHAPE, t=2) is a
+
+
+def test_json_round_trip_and_dispatch():
+    for name in SYSTEM_NAMES:
+        spec = get_system(name)
+        rt = system_from_json(system_to_json(spec))
+        assert rt.signature == spec.signature
+        assert rt.name == spec.name and rt.fields == spec.fields
+    # repro.api.spec_from_json dispatches on the "fields" key
+    obj = system_to_json(get_system("advection-diffusion"))
+    spec = spec_from_json(obj)
+    assert isinstance(spec, SystemSpec)
+    assert spec.fields == ("a", "b")
+    with pytest.raises(ValueError, match="'fields' and 'couplings'"):
+        system_from_json({"fields": ["u"]})
+
+
+def test_library_and_cost_model():
+    assert system_names() == sorted(SYSTEM_NAMES)
+    with pytest.raises(KeyError, match="unknown system"):
+        get_system("navier-stokes")
+    gs = get_system("gray-scott")
+    assert gs.radius == 1 and gs.ndim == 2 and gs.nfields == 2
+    # flops: 2 per tap summed over couplings (5+5 taps) + reaction
+    per = gs.per_field_flops()
+    assert per["u"] == per["v"] and sum(per.values()) == gs.flops_per_cell
+    assert gs.a_gm == 4.0                       # 2 per field
+    prog = compile_system(gs, SHAPE, t=2)
+    c = prog.cost()
+    assert c["flops_per_step"] == gs.flops_per_cell * SHAPE[0] * SHAPE[1]
+    assert c["hbm_bytes_per_step"] == 4.0 * SHAPE[0] * SHAPE[1] * 4
+    stats = prog.cache_stats()
+    assert {"system_programs", "system_runners"} <= set(stats)
+
+
+# ================================================= structural refusals =====
+def test_refusals():
+    # dangling coupling endpoint
+    with pytest.raises(ValueError, match="dangling source 'w'"):
+        define_system(["u"], {("u", "w"): LAP01})
+    with pytest.raises(ValueError, match="dangling destination 'w'"):
+        define_system(["u"], {("w", "u"): LAP01})
+    # duplicate field names
+    with pytest.raises(ValueError, match="duplicate field"):
+        define_system(["u", "u"], {("u", "u"): LAP01})
+    # a field no coupling updates
+    with pytest.raises(ValueError, match="destination of no coupling"):
+        define_system(["u", "v"], {("u", "u"): LAP01})
+    # identity-only everywhere: no spatial coupling to block over
+    with pytest.raises(ValueError, match="radius is 0"):
+        define_system(["u", "v"], {("u", "v"): IDENT, ("v", "u"): IDENT,
+                                   ("u", "u"): IDENT, ("v", "v"): IDENT})
+    # per-pair radius > 8 refused by the shared tap validation
+    far = (((0, 0), 0.5), ((0, 9), 0.5))
+    with pytest.raises(ValueError, match="radius 9 exceeds"):
+        define_system(["u"], {("u", "u"): far})
+    # unknown reaction named at define time, registry listed
+    with pytest.raises(ValueError, match="unknown reaction 'nope'"):
+        define_system(["u"], {("u", "u"): LAP01}, reactions="nope")
+    # mismatched field shapes at run time
+    spec = get_system("gray-scott")
+    prog = compile_system(spec, SHAPE, t=1)
+    f0 = fields_for(spec)
+    bad = dict(f0, v=jnp.zeros((8, 8), jnp.float32))
+    with pytest.raises(ValueError, match="every field shares one domain"):
+        prog.run(bad, 2)
+    with pytest.raises(ValueError, match="has fields"):
+        prog.run({"u": f0["u"]}, 2)
+    # mixed-dimensionality couplings (each internally consistent)
+    lap3 = (((0, 0, 0), 0.5), ((0, 0, 1), 0.25), ((0, 0, -1), 0.25))
+    with pytest.raises(ValueError, match="share one dimensionality"):
+        define_system(["u", "v"], {("u", "u"): LAP01, ("v", "v"): lap3})
+    # shape/radius validation at compile time
+    with pytest.raises(ValueError, match="halo would cover"):
+        compile_system(spec, (3, 3), t=1)
+    with pytest.raises(ValueError, match="is 2-D"):
+        compile_system(spec, (16, 16, 16), t=1)
+    with pytest.raises(ValueError, match="depth must be >= 1"):
+        compile_system(spec, SHAPE, t=0)
+
+
+def test_radius_zero_cross_coupling_allowed():
+    """Identity-only couplings (radius 0) are legitimate as long as the
+    system radius clears 1 — the advection-diffusion exchange case."""
+    spec = define_system(
+        ["u", "v"],
+        {("u", "u"): LAP01, ("u", "v"): (((0, 0), 0.05),),
+         ("v", "v"): IDENT, ("v", "u"): (((0, 0), -0.05),)})
+    assert spec.radius == 1
+    prog = compile_system(spec, SHAPE, t=2, boundary=Boundary.neumann())
+    f0 = fields_for(spec)
+    out = prog.run(f0, 4)
+    want = oracle(f0, spec, 4, Boundary.neumann())
+    for f in spec.fields:
+        assert float(np.abs(np.asarray(out[f]) - want[f]).max()) < 2e-5
