@@ -1,0 +1,83 @@
+"""``attention/`` bench family: the compile-once attention programs.
+
+Flash (online-softmax, no S×S materialization) vs the dense oracle path,
+through the same :class:`AttentionProgram` front door the model uses:
+
+    attention/chunked-<case>   the jnp online-softmax program (the impl
+        the LM dry-run cells lower); derived carries ``naive_us=`` (the
+        dense control of the SAME run) and ``analytic_bytes=`` (the
+        kernel-model HBM traffic: q,k,v read + o written once)
+    attention/pallas-<case>    the Pallas flash kernel in interpret mode
+        — tracked for trend only (interpret-mode wall time has nothing
+        to do with TPU wall time; the traffic column is the claim)
+    attention/dense-<case>     the untouched dense oracle — the
+        naive control row (nobody optimizes it, so when it moves the
+        machine moved): ``scripts/bench_gate.py`` divides the other
+        rows by its drift before applying the regression threshold
+    attention/grad-<case>      chunked VJP via the program's ``.grad``
+
+The load-immune claim is the ``analytic_bytes`` ratio: dense round-trips
+the S×Sk score block per head on top of q/k/v/o, flash streams k/v
+through VMEM and writes o once — the §4.1/§4.3 "one tile resident,
+stream the rest" discipline applied to the LM half.  Rows are persisted
+to ``BENCH_attention.json`` by ``benchmarks/run.py`` (min-of-N across
+``--passes``, same estimator as every family).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.api import compile_attention
+from repro.kernels.flash_attention import attention_hbm_bytes
+
+# (label, b, s, heads, kv_heads, head_dim, q_chunk, kv_chunk)
+CASES = [
+    ("s256-gqa2", 1, 256, 4, 2, 32, 64, 128),
+    ("s512-mha", 1, 512, 4, 4, 32, 128, 128),
+]
+
+
+def _dense_bytes(b, s, h, hd, kv, itemsize=4) -> int:
+    """Dense-path HBM model: q/k/v read + o written, PLUS the (h, s, s)
+    score block written and re-read once per softmax pass."""
+    return (attention_hbm_bytes(b, s, s, h, kv, hd, bytes_per_el=itemsize)
+            + 2 * b * h * s * s * itemsize)
+
+
+def rows() -> list:
+    out = []
+    for label, b, s, h, kv, hd, qc, kc in CASES:
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32)
+        progs = {impl: compile_attention(
+            heads=h, kv_heads=kv, head_dim=hd, q_chunk=qc, kv_chunk=kc,
+            impl=impl, interpret=True) for impl in
+            ("chunked", "pallas", "dense")}
+
+        flash_bytes = attention_hbm_bytes(b, s, s, h, kv, hd,
+                                          bytes_per_el=4)
+        dense_bytes = _dense_bytes(b, s, h, hd, kv)
+        naive_us = time_fn(progs["dense"].apply, q, k, v)
+        chunked_us = time_fn(progs["chunked"].apply, q, k, v)
+        pallas_us = time_fn(progs["pallas"].apply, q, k, v, iters=3)
+
+        shared = (f"naive_us={naive_us:.1f}|"
+                  f"traffic_ratio={dense_bytes / flash_bytes:.2f}")
+        out.append((f"attention/chunked-{label}", chunked_us,
+                    f"{shared}|analytic_bytes={flash_bytes}|"
+                    f"note=online-softmax-no-SxS"))
+        out.append((f"attention/pallas-{label}", pallas_us,
+                    f"{shared}|analytic_bytes={flash_bytes}|"
+                    f"note=interpret-mode-trend-only"))
+        out.append((f"attention/dense-{label}", naive_us,
+                    f"analytic_bytes={dense_bytes}|note=naive-control"))
+
+        do = jnp.ones_like(q)
+        grad_us = time_fn(progs["chunked"].grad, q, k, v, do)
+        out.append((f"attention/grad-{label}", grad_us,
+                    f"naive_us={naive_us:.1f}|note=chunked-vjp"))
+    return out

@@ -23,7 +23,8 @@ BENCH_JSON = os.path.join(_ROOT, "BENCH_kernels.json")
 PERSIST_FILES = {"kernels": BENCH_JSON,
                  "serve": os.path.join(_ROOT, "BENCH_serve.json"),
                  "tuned": os.path.join(_ROOT, "BENCH_tuned.json"),
-                 "systems": os.path.join(_ROOT, "BENCH_systems.json")}
+                 "systems": os.path.join(_ROOT, "BENCH_systems.json"),
+                 "attention": os.path.join(_ROOT, "BENCH_attention.json")}
 
 
 def _git_rev() -> str:
@@ -102,10 +103,11 @@ def main() -> None:
         ap.error("--passes must be >= 1 (an empty entry would vacuously "
                  "pass the bench gate)")
 
-    from benchmarks import (bench_kernels, bench_resilient, bench_serve,
-                            bench_sharded, bench_systems, bench_tuned,
-                            fig7_speedups, fig8_resources, fig9_breakdown,
-                            lm_roofline, table2_suite, table3_depths)
+    from benchmarks import (bench_attention, bench_kernels,
+                            bench_resilient, bench_serve, bench_sharded,
+                            bench_systems, bench_tuned, fig7_speedups,
+                            fig8_resources, fig9_breakdown, lm_roofline,
+                            table2_suite, table3_depths)
     from benchmarks.common import emit
 
     modules = [
@@ -120,6 +122,7 @@ def main() -> None:
         ("resilient", bench_resilient),
         ("tuned", bench_tuned),
         ("systems", bench_systems),
+        ("attention", bench_attention),
         ("lm_roofline", lm_roofline),
     ]
     print("name,us_per_call,derived")

@@ -12,6 +12,12 @@ exchanged once per temporal block instead of once per step
     prog = compile_stencil(spec, shape, t=4, mesh=(2, 4))   # 8 devices
     y = prog.run_sharded(x, 64)          # 16 exchange rounds, not 64
 
+The LM workload gets the same compile-once treatment
+(``docs/attention.md``):
+
+    prog = compile_attention(heads=8, kv_heads=2, head_dim=64)
+    out = prog.apply(q, k, v)            # flash attention, memoized runner
+
 The definition layer is open: ``define_stencil`` / ``from_operator``
 build arbitrary user stencils with derived cost models; the Table-2
 registry (``repro.core.stencil_spec.get``) is just nine pre-built specs
@@ -20,6 +26,10 @@ for the quick-start and the deprecation policy for the legacy entry
 points (``ops.ebisu_stencil``, ``sweep.run_sweeps``).  Importing this
 package never initializes a JAX backend (checked by ``scripts/tier1.sh``).
 """
+from repro.api.attention import (AttentionProgram, AttentionSpec,
+                                 attention_cache_stats,
+                                 attention_program_for, clear_attention_caches,
+                                 compile_attention)
 from repro.api.boundary import Boundary
 from repro.api.define import from_operator, parse_taps, spec_from_json
 from repro.api.program import (ProgramCache, StencilProgram, cache_stats,
@@ -31,12 +41,18 @@ from repro.api.sharded import (count_ppermutes, planned_exchange_rounds,
 from repro.core.stencil_spec import StencilSpec, define_stencil
 
 __all__ = [
+    "AttentionProgram",
+    "AttentionSpec",
     "Boundary",
     "ProgramCache",
+    "attention_cache_stats",
+    "attention_program_for",
     "StencilProgram",
     "StencilSpec",
     "cache_stats",
+    "clear_attention_caches",
     "clear_caches",
+    "compile_attention",
     "compile_stencil",
     "count_ppermutes",
     "define_stencil",

@@ -1,0 +1,397 @@
+"""``AttentionProgram``: the compile-once front door for attention.
+
+The stencil half resolves its plan/geometry/boundary exactly once
+(``compile_stencil``) and hands back an immutable program with memoized
+jitted runners.  This module gives the LM half the same treatment: an
+attention configuration (heads, GQA groups, mask, chunking, dtype
+policy) is resolved exactly once into an :class:`AttentionProgram`, and
+every execution surface — the Pallas flash kernel, the chunked
+online-softmax jnp path, the dense oracle-shaped path — dispatches
+through one memoized runner table instead of ad-hoc call sites.
+
+    prog = compile_attention(heads=8, kv_heads=2, head_dim=64)
+    out  = prog.apply(q, k, v)           # forward, memoized jitted runner
+    dq, dk, dv = prog.grad(q, k, v, do)  # VJP runner (flash bwd kernels)
+
+Implementation selection (``impl=``):
+
+  * ``"pallas"``  — the Pallas TPU flash kernel
+    (``kernels/flash_attention.py``): q tile + running softmax stats
+    resident in VMEM, K/V streamed — the paper's §4.1/§4.3 "one tile in
+    scratchpad, stream the rest" execution model.  Chunk-divisibility is
+    validated at dispatch with the fix spelled out.
+  * ``"chunked"`` — the pure-jnp online-softmax path
+    (``models/attention.flash_attention``): same math, no Pallas; this
+    is what the LM dry-run cells lower (it shards/remats freely).
+  * ``"dense"``   — ``models/attention.dense_attention``, the
+    independent oracle (materializes S×S scores; reference semantics).
+  * ``"auto"``    — ``"pallas"`` on a real TPU backend, ``"chunked"``
+    elsewhere, mirroring ``compile_stencil``'s interpret choice.
+
+Semantics are defined by the dense oracle: causal masks compare absolute
+key position ≤ absolute query position, sliding windows keep
+``kpos > qpos - window``, GQA maps query head ``h`` to kv head
+``h // (heads // kv_heads)``.  ``tests/test_attention_program.py`` holds
+every impl to that oracle across a shapes × GQA × mask × dtype matrix,
+and the backward runners to ``jax.grad`` of the oracle.
+
+Dtype policy (mirrors ``resolve_compute_dtype``): ``dtype`` is the
+storage dtype of q/k/v; every impl computes in float32 and casts the
+output back to storage — bf16 fields pay one rounding at the end, not
+one per kv chunk.  Importing this module never initializes a JAX
+backend (checked by ``scripts/tier1.sh``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.program import ProgramCache
+
+IMPLS = ("auto", "pallas", "chunked", "dense")
+
+ATTN_PROGRAM_CACHE = ProgramCache(64, "attention_programs")
+ATTN_RUNNER_CACHE = ProgramCache(256, "attention_runners")
+
+
+def attention_cache_stats() -> dict:
+    """Hit/miss/size counters for the attention caches.
+
+        from repro.api import attention_cache_stats
+        attention_cache_stats()["attention_runners"]["misses"]
+    """
+    return {c.name: c.stats()
+            for c in (ATTN_PROGRAM_CACHE, ATTN_RUNNER_CACHE)}
+
+
+def clear_attention_caches() -> None:
+    for c in (ATTN_PROGRAM_CACHE, ATTN_RUNNER_CACHE):
+        c.clear()
+
+
+# ============================================================ AttentionSpec ==
+@dataclasses.dataclass(frozen=True)
+class AttentionSpec:
+    """The structural identity of an attention configuration — what two
+    programs must share to share runners.  Validated by
+    :func:`compile_attention`; hashable (it is the program cache key)."""
+    heads: int
+    kv_heads: int
+    head_dim: int
+    causal: bool = True
+    window: int | None = None
+    q_chunk: int = 256
+    kv_chunk: int = 512
+
+    @property
+    def groups(self) -> int:
+        """GQA group size: query heads per kv head."""
+        return self.heads // self.kv_heads
+
+    @property
+    def signature(self) -> tuple:
+        return (self.heads, self.kv_heads, self.head_dim, self.causal,
+                self.window, self.q_chunk, self.kv_chunk)
+
+
+def _validate_spec(spec: AttentionSpec) -> None:
+    if spec.heads < 1 or spec.kv_heads < 1 or spec.head_dim < 1:
+        raise ValueError(
+            f"heads/kv_heads/head_dim must be >= 1, got "
+            f"({spec.heads}, {spec.kv_heads}, {spec.head_dim})")
+    if spec.heads % spec.kv_heads:
+        raise ValueError(
+            f"GQA needs kv_heads | heads: got heads={spec.heads}, "
+            f"kv_heads={spec.kv_heads} — pick kv_heads from the divisors "
+            f"of {spec.heads}")
+    if spec.window is not None and spec.window < 1:
+        raise ValueError(f"sliding window must be >= 1 token, got "
+                         f"{spec.window} (None disables windowing)")
+    if spec.q_chunk < 1 or spec.kv_chunk < 1:
+        raise ValueError(
+            f"q_chunk/kv_chunk must be >= 1, got "
+            f"({spec.q_chunk}, {spec.kv_chunk})")
+
+
+def spec_from_arch(cfg, *, causal: bool = True) -> AttentionSpec:
+    """An :class:`AttentionSpec` from an ``ArchConfig``-shaped object
+    (``n_heads``/``kv_heads``/``head_dim``/``swa_window``/``q_chunk``/
+    ``kv_chunk`` attributes)."""
+    return AttentionSpec(heads=cfg.n_heads, kv_heads=cfg.kv_heads,
+                         head_dim=cfg.head_dim, causal=causal,
+                         window=cfg.swa_window, q_chunk=cfg.q_chunk,
+                         kv_chunk=cfg.kv_chunk)
+
+
+# ========================================================= AttentionProgram ==
+class AttentionProgram:
+    """An immutable compiled attention configuration with memoized jitted
+    forward/VJP runners.  Construct via :func:`compile_attention`:
+
+        prog = compile_attention(heads=8, kv_heads=2, head_dim=64)
+        out = prog.apply(q, k, v)            # (B, S, H, hd)
+        dq, dk, dv = prog.grad(q, k, v, do)  # VJP at (q, k, v)
+
+    Runners are keyed per (impl, input shapes) in the bounded
+    ``ATTN_RUNNER_CACHE`` — a serving loop over one bucket jits once.
+    Inside an outer trace (jit / scan / grad), ``apply`` inlines the
+    implementation instead of nesting a jit, so lowered programs (the
+    dry-run cells, train_step) see exactly the ops they saw before the
+    front door existed."""
+
+    def __init__(self, key, spec: AttentionSpec, dtype, compute_dtype,
+                 impl: str, interpret: bool):
+        self._key = key
+        self.spec = spec
+        self.dtype = dtype
+        self.compute_dtype = compute_dtype
+        self.impl = impl
+        self.interpret = interpret
+
+    # ------------------------------------------------------------ checks ----
+    def _check(self, q, k, v):
+        sp = self.spec
+        if q.ndim != 4 or k.ndim != 4 or v.ndim != 4:
+            raise ValueError(
+                f"attention inputs are rank-4 (B, S, heads, head_dim); got "
+                f"q{tuple(q.shape)} k{tuple(k.shape)} v{tuple(v.shape)}")
+        b, s, h, hd = q.shape
+        bk, sk, kv, hdk = k.shape
+        if k.shape != v.shape:
+            raise ValueError(f"k and v must share a shape; got "
+                             f"k{tuple(k.shape)} v{tuple(v.shape)}")
+        if h != sp.heads or kv != sp.kv_heads or hd != sp.head_dim \
+                or hdk != sp.head_dim or b != bk:
+            raise ValueError(
+                f"program compiled for heads={sp.heads}, "
+                f"kv_heads={sp.kv_heads}, head_dim={sp.head_dim}; got "
+                f"q{tuple(q.shape)} k{tuple(k.shape)} — compile_attention "
+                "a new program for a new head layout")
+        for name, x in (("q", q), ("k", k), ("v", v)):
+            if x.dtype != self.dtype:
+                raise ValueError(
+                    f"program compiled for dtype {self.dtype.name}; {name} "
+                    f"is {x.dtype.name} — cast the operand or "
+                    f"compile_attention(dtype={x.dtype.name})")
+
+    def _resolve_impl(self, s: int, sk: int) -> str:
+        """The impl a (s, sk) call dispatches: 'auto' picks the Pallas
+        kernel only where it can actually launch (chunk-divisible shapes
+        on the compiled backend mode); explicit 'pallas' refuses
+        undivisible shapes with the fix spelled out."""
+        sp = self.spec
+        qc, kc = min(sp.q_chunk, s), min(sp.kv_chunk, sk)
+        divisible = (s % qc == 0) and (sk % kc == 0)
+        if self.impl == "pallas":
+            if not divisible:
+                raise ValueError(
+                    f"impl='pallas' needs chunk-divisible sequences: "
+                    f"S={s} %% q_chunk({qc}) or Sk={sk} %% kv_chunk({kc}) "
+                    "!= 0 — pad the sequence, change q_chunk/kv_chunk, or "
+                    "compile impl='chunked'")
+            return "pallas"
+        if self.impl == "auto":
+            return "pallas" if (divisible and not self.interpret) \
+                else "chunked"
+        return self.impl
+
+    # ----------------------------------------------------------- runners ----
+    def _fn(self, impl: str):
+        """The raw differentiable callable for ``impl`` — closed over the
+        program's static configuration, taking only (q, k, v)."""
+        sp = self.spec
+        if impl == "pallas":
+            from repro.kernels.flash_attention import (
+                flash_attention_trainable)
+
+            def fn(q, k, v):
+                return flash_attention_trainable(
+                    q, k, v, sp.causal, sp.window, sp.q_chunk, sp.kv_chunk,
+                    self.interpret)
+        elif impl == "chunked":
+            from repro.models.attention import flash_attention
+
+            def fn(q, k, v):
+                return flash_attention(q, k, v, causal=sp.causal,
+                                       window=sp.window,
+                                       q_chunk=sp.q_chunk,
+                                       kv_chunk=sp.kv_chunk)
+        elif impl == "dense":
+            from repro.models.attention import dense_attention
+
+            def fn(q, k, v):
+                return dense_attention(q, k, v, causal=sp.causal,
+                                       window=sp.window)
+        else:  # pragma: no cover — impl validated at compile
+            raise ValueError(impl)
+        return fn
+
+    def apply(self, q, k, v):
+        """Forward attention: q ``(B, S, H, hd)``, k/v ``(B, Sk, KV,
+        hd)`` → ``(B, S, H, hd)`` in the program's storage dtype.
+
+        Top-level calls go through a memoized jitted runner; calls made
+        while tracing (inside an outer jit/scan/grad) inline the
+        implementation so the outer program lowers exactly as before.
+        """
+        self._check(q, k, v)
+        impl = self._resolve_impl(q.shape[1], k.shape[1])
+        if isinstance(q, jax.core.Tracer):
+            return self._fn(impl)(q, k, v)
+        key = (self._key, "fwd", impl, q.shape, k.shape)
+        fn = ATTN_RUNNER_CACHE.get_or_build(
+            key, lambda: jax.jit(self._fn(impl)))
+        return fn(q, k, v)
+
+    def grad(self, q, k, v, do):
+        """The VJP of :meth:`apply` at (q, k, v) against cotangent ``do``
+        → ``(dq, dk, dv)``.  For ``impl='pallas'`` this runs the Pallas
+        backward kernels (dq over the kv axis, dk/dv over the q axis)
+        via the kernel's ``custom_vjp``; other impls differentiate the
+        jnp path.  Matches ``jax.grad`` of the dense oracle (tested)."""
+        self._check(q, k, v)
+        if do.shape != q.shape:
+            raise ValueError(f"cotangent must match q: got do"
+                             f"{tuple(do.shape)} vs q{tuple(q.shape)}")
+        impl = self._resolve_impl(q.shape[1], k.shape[1])
+        fn_raw = self._fn(impl)
+
+        def vjp_fn(q, k, v, do):
+            _, vjp = jax.vjp(fn_raw, q, k, v)
+            return vjp(do)
+
+        if isinstance(q, jax.core.Tracer):
+            return vjp_fn(q, k, v, do)
+        key = (self._key, "vjp", impl, q.shape, k.shape)
+        fn = ATTN_RUNNER_CACHE.get_or_build(key, lambda: jax.jit(vjp_fn))
+        return fn(q, k, v, do)
+
+    # ----------------------------------------------------- introspection ----
+    def hbm_bytes(self, b: int, s: int, sk: int) -> int:
+        """Kernel-model HBM traffic for one forward call: q, k, v read
+        once + o written once — no S×S score materialization (the
+        chunked-jnp path's score blocks round-trip ~``S·Sk`` extra)."""
+        from repro.kernels.flash_attention import attention_hbm_bytes
+        return attention_hbm_bytes(b, s, sk, self.spec.heads,
+                                   self.spec.kv_heads, self.spec.head_dim,
+                                   bytes_per_el=self.dtype.itemsize)
+
+    def cache_stats(self) -> dict:
+        """Counters of the module's bounded caches — see
+        :func:`attention_cache_stats`."""
+        return attention_cache_stats()
+
+    def __repr__(self) -> str:
+        sp = self.spec
+        return (f"AttentionProgram(heads={sp.heads}, kv_heads={sp.kv_heads},"
+                f" head_dim={sp.head_dim}, causal={sp.causal}, "
+                f"window={sp.window}, chunks=({sp.q_chunk}, {sp.kv_chunk}), "
+                f"impl={self.impl!r}, dtype={self.dtype.name}/"
+                f"{self.compute_dtype.name}, interpret={self.interpret})")
+
+
+# ========================================================= compile_attention ==
+def compile_attention(cfg=None, *, heads: int | None = None,
+                      kv_heads: int | None = None,
+                      head_dim: int | None = None, causal: bool = True,
+                      window: int | None = None, q_chunk: int | None = None,
+                      kv_chunk: int | None = None, dtype=jnp.float32,
+                      compute_dtype=None, impl: str = "auto",
+                      interpret: bool | None = None) -> AttentionProgram:
+    """Compile an attention configuration to an immutable
+    :class:`AttentionProgram` — the LM twin of ``compile_stencil``.
+
+        from repro.api import compile_attention
+        prog = compile_attention(heads=8, kv_heads=2, head_dim=64,
+                                 window=4096, dtype=jnp.bfloat16)
+        out = prog.apply(q, k, v)
+
+    ``cfg`` may be an :class:`AttentionSpec` or an ``ArchConfig``-shaped
+    object (``n_heads``/``kv_heads``/``head_dim``/``swa_window``/
+    ``q_chunk``/``kv_chunk``); explicit keywords override its fields.
+    ``impl`` ∈ ``{"auto", "pallas", "chunked", "dense"}`` (module
+    docstring); ``interpret`` defaults to non-TPU backends, resolved at
+    compile time — importing stays backend-free.
+
+    The dtype policy: ``dtype`` is q/k/v storage; compute is float32
+    (``compute_dtype`` may restate it; other compute dtypes are refused
+    — every attention path runs its softmax/dots in f32 and casts the
+    output back to storage once).  Programs are memoized in the bounded
+    ``ATTN_PROGRAM_CACHE``; recompiling with identical arguments returns
+    the same handle.
+    """
+    if isinstance(cfg, AttentionSpec):
+        base = cfg
+    elif cfg is not None:
+        base = spec_from_arch(cfg, causal=causal)
+        if window is None:
+            window = base.window
+        if q_chunk is None:
+            q_chunk = base.q_chunk
+        if kv_chunk is None:
+            kv_chunk = base.kv_chunk
+    else:
+        base = None
+    if base is not None:
+        heads = base.heads if heads is None else heads
+        kv_heads = base.kv_heads if kv_heads is None else kv_heads
+        head_dim = base.head_dim if head_dim is None else head_dim
+        if isinstance(cfg, AttentionSpec):
+            causal = base.causal
+            window = base.window if window is None else window
+            q_chunk = base.q_chunk if q_chunk is None else q_chunk
+            kv_chunk = base.kv_chunk if kv_chunk is None else kv_chunk
+    if heads is None or head_dim is None:
+        raise ValueError(
+            "compile_attention needs heads and head_dim — pass them as "
+            "keywords or hand in an AttentionSpec / ArchConfig")
+    spec = AttentionSpec(heads=heads,
+                         kv_heads=heads if kv_heads is None else kv_heads,
+                         head_dim=head_dim, causal=causal, window=window,
+                         q_chunk=256 if q_chunk is None else q_chunk,
+                         kv_chunk=512 if kv_chunk is None else kv_chunk)
+    _validate_spec(spec)
+    if impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
+    d = jnp.dtype(dtype)
+    if not jnp.issubdtype(d, jnp.floating):
+        raise ValueError(f"attention dtype must be floating, got {d.name}")
+    cd = jnp.dtype(jnp.float32 if compute_dtype is None else compute_dtype)
+    if cd != jnp.float32:
+        raise ValueError(
+            f"attention computes in float32 (softmax + dots are f32 in "
+            f"every impl); got compute_dtype={cd.name} — drop it or pass "
+            "float32")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    key = (spec, d.name, cd.name, impl, bool(interpret))
+    return ATTN_PROGRAM_CACHE.get_or_build(
+        key, lambda: AttentionProgram(key, spec, d, cd, impl,
+                                      bool(interpret)))
+
+
+def attention_program_for(cfg, *, causal: bool = True,
+                          dtype=None) -> AttentionProgram:
+    """The program an ``ArchConfig`` resolves to — the ONE mapping from
+    config-level ``attention_impl`` names to program impls, shared by
+    the model forward pass, the train step, and the serving driver.
+
+        prog = attention_program_for(cfg)            # decoder blocks
+        prog = attention_program_for(cfg, causal=False)   # encoder
+
+    ``dtype`` defaults to ``cfg.activ_dtype``; the model passes the
+    actual post-projection q dtype (norm params may promote bf16
+    activations to f32) — programs are memoized, so per-dtype handles
+    are free."""
+    impl = {"flash_jnp": "chunked", "flash_pallas": "pallas"}.get(
+        cfg.attention_impl)
+    if impl is None:
+        raise ValueError(
+            f"attention_impl {cfg.attention_impl!r} has no program "
+            "mapping (boundary_stub is inlined by the model, not "
+            "compiled) — use 'flash_jnp' or 'flash_pallas'")
+    return compile_attention(
+        cfg, causal=causal,
+        dtype=cfg.activ_dtype if dtype is None else dtype, impl=impl)

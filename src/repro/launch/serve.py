@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 import repro.configs as C
+from repro.api.attention import attention_cache_stats, attention_program_for
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer
 from repro.models.params import tree_init, tree_shardings
@@ -35,6 +36,10 @@ def run(arch: str, *, batch: int = 4, prompt_len: int = 32,
             key, (batch, cfg.vlm_patches, cfg.vlm_patch_dim),
             cfg.activ_dtype)
 
+    # Warm the attention program handle before tracing: prefill dispatches
+    # through the compile-once AttentionProgram (repro.api.attention).
+    if cfg.family != "ssm" and cfg.attention_impl != "boundary_stub":
+        attention_program_for(cfg)
     prefill = jax.jit(serve.make_prefill(cfg, cache_len))
     decode = jax.jit(serve.make_decode_step(cfg), donate_argnums=(1,))
     pos = prompt_len + (cfg.vlm_patches if cfg.family == "vlm" else 0)
@@ -69,6 +74,9 @@ def run(arch: str, *, batch: int = 4, prompt_len: int = 32,
           f"{t_decode*1e3:.1f}ms "
           f"({(max_new-1)*batch/max(t_decode,1e-9):.1f} tok/s, "
           f"best of {max(1, repeats)})", flush=True)
+    stats = attention_cache_stats()["attention_programs"]
+    print(f"[serve] attention programs: {stats['size']} compiled, "
+          f"{stats['hits']} cache hits", flush=True)
     return out
 
 

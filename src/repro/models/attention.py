@@ -8,6 +8,16 @@ one pass over memory regardless of sequence length, bounded working set
 Supports GQA/MQA (kv_heads ≤ heads), causal or bidirectional masks, sliding
 windows (SWA), and an optional q/k RMS-norm (qwen3-style), all under one
 implementation so every assigned architecture shares this code path.
+
+These functions are the *implementation primitives* behind the compile-once
+front door in ``repro.api.attention``: ``dense_attention`` is the oracle
+(the semantics every other path is tested against), ``flash_attention`` is
+the chunked impl, and the Pallas kernel lives in
+``kernels/flash_attention.py``.  Model/serving code dispatches through
+``compile_attention(...) -> AttentionProgram`` rather than calling these
+directly; ``decode_attention``/``cache_update`` remain the single-token
+cached-decode path (dynamic cache lengths don't fit a static program
+signature).
 """
 from __future__ import annotations
 

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.api.attention import attention_program_for
 from repro.models import attention as attn
 from repro.models import layers as L
 from repro.models import moe as moe_mod
@@ -68,9 +69,12 @@ def apply_attn(x, p, cfg, *, positions, causal=True):
         vm = jnp.repeat(v.mean(axis=1, keepdims=True), g, axis=2)
         out = q * km + vm
     else:
-        out = attn.flash_attention(
-            q, k, v, causal=causal, window=cfg.swa_window,
-            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        # Compile-once front door (repro.api.attention): the program for
+        # this cfg resolves impl/mask/chunking a single time and is
+        # memoized; inside this traced scan body it inlines, so the
+        # lowered HLO matches the direct flash_attention call.
+        prog = attention_program_for(cfg, causal=causal, dtype=q.dtype)
+        out = prog.apply(q, k.astype(q.dtype), v.astype(q.dtype))
     return out.reshape(b, s, h * hd) @ p["wo"], (k, v)
 
 

@@ -13,8 +13,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.api.attention import attention_program_for
 from repro.models import transformer
 from repro.train import optimizer as opt
+
+ATTENTION_FAMILIES = ("dense", "moe", "vlm", "encoder", "hybrid")
 
 
 def shift_labels(batch):
@@ -37,6 +40,12 @@ def loss_fn(cfg, params, batch):
 def make_train_step(cfg, ocfg: opt.OptConfig):
     """Returns train_step(params, opt_state, batch) -> (params', state', metrics)."""
     n_micro = max(1, cfg.microbatches)
+    # Resolve the attention program once at build time (compile-once
+    # discipline): the traced model then hits the memoized handle, and a
+    # bad head/chunk layout fails here, not deep inside the first trace.
+    if cfg.family in ATTENTION_FAMILIES and cfg.attention_impl in (
+            "flash_jnp", "flash_pallas"):
+        attention_program_for(cfg, causal=cfg.family != "encoder")
 
     def train_step(params, opt_state, batch):
         if n_micro == 1:

@@ -1,0 +1,243 @@
+"""The attention front door: ``AttentionProgram`` vs the independent dense
+oracle (parity matrix over shapes × GQA × masks × dtypes), backward vs
+``jax.grad`` of the oracle, chunk invariance, bounded-cache build-once
+under concurrent compile, and the import-hygiene gate — the
+``test_program.py`` pattern applied to the LM half."""
+import concurrent.futures
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (AttentionProgram, AttentionSpec, ProgramCache,
+                       attention_cache_stats, attention_program_for,
+                       clear_attention_caches, compile_attention)
+from repro.api.attention import ATTN_PROGRAM_CACHE
+from repro.models.attention import dense_attention
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def qkv(b, s, h, kv, hd, dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32)
+    return q.astype(dtype), k.astype(dtype), v.astype(dtype)
+
+
+# ================================================= oracle parity matrix ==
+# Every impl against dense_attention — the independent reference whose
+# semantics test_flash_kernel.py pins the Pallas kernel to.
+MATRIX = [
+    # (b, s, h, kv, hd)         — GQA group sizes 2, 1 (MHA), 4 (MQA-ish)
+    (2, 64, 4, 2, 32),
+    (1, 128, 8, 8, 16),
+    (2, 96, 4, 1, 32),
+]
+MASKS = [(True, None), (False, None), (True, 24)]
+
+
+@pytest.mark.parametrize("impl", ["pallas", "chunked", "dense"])
+@pytest.mark.parametrize("causal,window", MASKS,
+                         ids=["causal", "bidir", "swa24"])
+@pytest.mark.parametrize("b,s,h,kv,hd", MATRIX)
+def test_program_matches_dense_oracle(b, s, h, kv, hd, causal, window,
+                                      impl):
+    if impl == "pallas" and s % 32:
+        pytest.skip("pallas needs chunk-divisible S in this matrix")
+    q, k, v = qkv(b, s, h, kv, hd)
+    prog = compile_attention(heads=h, kv_heads=kv, head_dim=hd,
+                             causal=causal, window=window, q_chunk=32,
+                             kv_chunk=32, impl=impl, interpret=True)
+    got = prog.apply(q, k, v)
+    want = dense_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("impl", ["pallas", "chunked"])
+def test_program_bf16_matches_oracle(impl):
+    q, k, v = qkv(2, 64, 4, 2, 32, dtype=jnp.bfloat16)
+    prog = compile_attention(heads=4, kv_heads=2, head_dim=32,
+                             q_chunk=32, kv_chunk=32, dtype=jnp.bfloat16,
+                             impl=impl, interpret=True)
+    got = prog.apply(q, k, v)
+    assert got.dtype == jnp.bfloat16
+    want = dense_attention(q.astype(jnp.float32), k.astype(jnp.float32),
+                           v.astype(jnp.float32), causal=True)
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(want), atol=0.06, rtol=0.06)
+
+
+# ============================================================== backward ==
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 24),
+                                           (False, None)],
+                         ids=["causal", "swa24", "bidir"])
+@pytest.mark.parametrize("impl", ["pallas", "chunked", "dense"])
+def test_program_grad_matches_oracle_grad(impl, causal, window):
+    b, s, h, kv, hd = 2, 64, 4, 2, 32
+    q, k, v = qkv(b, s, h, kv, hd, seed=3)
+    do = jax.random.normal(jax.random.PRNGKey(9), q.shape, jnp.float32)
+    prog = compile_attention(heads=h, kv_heads=kv, head_dim=hd,
+                             causal=causal, window=window, q_chunk=32,
+                             kv_chunk=32, impl=impl, interpret=True)
+    dq, dk, dv = prog.grad(q, k, v, do)
+
+    def oracle_loss(q, k, v):
+        return (dense_attention(q, k, v, causal=causal,
+                                window=window) * do).sum()
+
+    gq, gk, gv = jax.grad(oracle_loss, argnums=(0, 1, 2))(q, k, v)
+    for got, want, name in ((dq, gq, "dq"), (dk, gk, "dk"), (dv, gv, "dv")):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4, rtol=1e-4, err_msg=name)
+
+
+def test_program_differentiable_inside_outer_grad():
+    """prog.apply inlines under an outer trace — jax.grad through it
+    equals the oracle's gradient (the transformer's training path)."""
+    q, k, v = qkv(1, 64, 4, 2, 16, seed=5)
+    prog = compile_attention(heads=4, kv_heads=2, head_dim=16, q_chunk=32,
+                             kv_chunk=32, impl="pallas", interpret=True)
+    g = jax.jit(jax.grad(lambda q: prog.apply(q, k, v).sum()))(q)
+    want = jax.grad(lambda q: dense_attention(q, k, v, causal=True).sum())(q)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ====================================================== chunk invariance ==
+@pytest.mark.parametrize("qc,kc", [(16, 16), (32, 64), (64, 32)])
+def test_program_chunk_invariance(qc, kc):
+    """Chunk sizes are an execution schedule, not semantics: every
+    (q_chunk, kv_chunk) pair produces the same output."""
+    q, k, v = qkv(1, 64, 4, 2, 32, seed=7)
+    base = compile_attention(heads=4, kv_heads=2, head_dim=32, q_chunk=64,
+                             kv_chunk=64, impl="pallas", interpret=True)
+    ref = base.apply(q, k, v)
+    for impl in ("pallas", "chunked"):
+        prog = compile_attention(heads=4, kv_heads=2, head_dim=32,
+                                 q_chunk=qc, kv_chunk=kc, impl=impl,
+                                 interpret=True)
+        np.testing.assert_allclose(np.asarray(prog.apply(q, k, v)),
+                                   np.asarray(ref), atol=2e-5, rtol=2e-5,
+                                   err_msg=f"{impl} ({qc},{kc})")
+
+
+# ============================================== program cache semantics ==
+def test_program_memoized_and_distinct():
+    a = compile_attention(heads=4, kv_heads=2, head_dim=32, interpret=True)
+    b = compile_attention(heads=4, kv_heads=2, head_dim=32, interpret=True)
+    assert a is b
+    c = compile_attention(heads=4, kv_heads=2, head_dim=32, window=128,
+                          interpret=True)
+    assert c is not a
+    assert isinstance(a, AttentionProgram)
+    assert a.spec == AttentionSpec(heads=4, kv_heads=2, head_dim=32)
+
+
+def test_concurrent_compile_builds_once():
+    """N threads compiling the same config race into get_or_build; the
+    bounded cache hands every one the same handle and charges ONE miss."""
+    spec = AttentionSpec(heads=8, kv_heads=4, head_dim=16, q_chunk=32,
+                         kv_chunk=32)
+    clear_attention_caches()
+    before = ATTN_PROGRAM_CACHE.stats()["misses"]
+    with concurrent.futures.ThreadPoolExecutor(max_workers=8) as ex:
+        progs = list(ex.map(
+            lambda _: compile_attention(spec, interpret=True), range(16)))
+    assert all(p is progs[0] for p in progs)
+    assert ATTN_PROGRAM_CACHE.stats()["misses"] == before + 1
+
+
+def test_runner_reuse_and_cache_stats():
+    clear_attention_caches()
+    q, k, v = qkv(1, 64, 4, 2, 16)
+    prog = compile_attention(heads=4, kv_heads=2, head_dim=16, q_chunk=32,
+                             kv_chunk=32, impl="chunked", interpret=True)
+    prog.apply(q, k, v)
+    misses = attention_cache_stats()["attention_runners"]["misses"]
+    prog.apply(q, k, v)                      # same shape: runner reused
+    stats = prog.cache_stats()
+    assert stats["attention_runners"]["misses"] == misses
+    assert stats["attention_runners"]["hits"] >= 1
+    assert isinstance(ATTN_PROGRAM_CACHE, ProgramCache)
+    assert stats["attention_programs"]["size"] <= \
+        stats["attention_programs"]["maxsize"]
+
+
+def test_arch_config_entry_point():
+    """attention_program_for maps config impl names and reuses handles."""
+    import repro.configs as C
+
+    cfg = C.get_config("h2o-danube-1.8b").reduced()
+    a = attention_program_for(cfg)
+    b = attention_program_for(cfg)
+    assert a is b
+    assert a.spec.heads == cfg.n_heads
+    assert a.spec.kv_heads == cfg.kv_heads
+    assert a.spec.window == cfg.swa_window
+    assert a.impl == "chunked"               # flash_jnp maps to chunked
+
+
+# ============================================================ validation ==
+def test_program_validation_errors():
+    with pytest.raises(ValueError, match="kv_heads"):
+        compile_attention(heads=6, kv_heads=4, head_dim=16, interpret=True)
+    with pytest.raises(ValueError, match="heads and head_dim"):
+        compile_attention(heads=4, interpret=True)
+    with pytest.raises(ValueError, match="impl"):
+        compile_attention(heads=4, head_dim=16, impl="flash",
+                          interpret=True)
+    with pytest.raises(ValueError, match="float32"):
+        compile_attention(heads=4, head_dim=16,
+                          compute_dtype=jnp.bfloat16, interpret=True)
+    prog = compile_attention(heads=4, kv_heads=2, head_dim=16, q_chunk=32,
+                             kv_chunk=32, interpret=True)
+    q, k, v = qkv(1, 64, 4, 2, 16)
+    with pytest.raises(ValueError, match="compiled for heads"):
+        prog.apply(q[:, :, :2], k, v)
+    with pytest.raises(ValueError, match="dtype"):
+        prog.apply(q.astype(jnp.bfloat16), k, v)
+    with pytest.raises(ValueError, match="cotangent"):
+        prog.grad(q, k, v, q[:, :32])
+    pal = compile_attention(heads=4, kv_heads=2, head_dim=16, q_chunk=32,
+                            kv_chunk=32, impl="pallas", interpret=True)
+    with pytest.raises(ValueError, match="chunk-divisible"):
+        pal.apply(q[:, :63], k[:, :63], v[:, :63])
+
+
+def test_auto_impl_falls_back_on_undivisible():
+    """impl='auto' routes undivisible shapes to the chunked path (which
+    itself falls back to dense for short sequences) instead of failing."""
+    prog = compile_attention(heads=4, kv_heads=2, head_dim=16, q_chunk=32,
+                             kv_chunk=32, impl="auto", interpret=True)
+    assert prog._resolve_impl(63, 63) == "chunked"
+    q, k, v = qkv(1, 63, 4, 2, 16)
+    want = dense_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(prog.apply(q, k, v)),
+                               np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+# ======================================================= import hygiene ==
+def test_attention_import_initializes_no_backend():
+    """compile_attention resolves interpret-vs-native at COMPILE time;
+    importing the api package must not touch a backend (tier1.sh gate)."""
+    code = (
+        "import repro.api\n"
+        "from repro.api import compile_attention, AttentionProgram\n"
+        "from jax._src import xla_bridge\n"
+        "assert not getattr(xla_bridge, '_backends', {}), "
+        "'attention import initialized a JAX backend'\n"
+        "print('clean')\n"
+    )
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(_ROOT, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=120)
+    assert r.returncode == 0 and "clean" in r.stdout, r.stderr
